@@ -1,0 +1,43 @@
+"""Render EXPERIMENTS.md roofline tables from dry-run jsons."""
+from __future__ import annotations
+
+import json
+import sys
+
+
+def fmt_table(path, mesh_filter=None, baseline_path=None):
+    rows = json.load(open(path))
+    base = {}
+    if baseline_path:
+        for r in json.load(open(baseline_path)):
+            if "error" in r or r.get("skipped"):
+                continue
+            base[(r["arch"], r["shape"], r["mesh"])] = r
+    out = []
+    out.append("| arch | shape | mesh | compute | memory | collective | "
+               "dominant | useful | MODEL_FLOPs | peak GiB/dev |")
+    out.append("|---|---|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        if r.get("skipped"):
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | - | "
+                       f"skip | - | - | - |")
+            continue
+        if "error" in r:
+            out.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | | | |")
+            continue
+        if mesh_filter and r["mesh"] != mesh_filter:
+            continue
+        ms = lambda x: f"{x*1e3:.1f}ms"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{ms(r['compute_s'])} | {ms(r['memory_s'])} | "
+            f"{ms(r['collective_s'])} | {r['dominant'].replace('_s','')} | "
+            f"{r['useful_flops_frac']:.2f} | "
+            f"{r['model_flops_global']:.2e} | "
+            f"{r['bytes_per_device']['peak']/2**30:.1f} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    print(fmt_table(sys.argv[1],
+                    sys.argv[2] if len(sys.argv) > 2 else None))

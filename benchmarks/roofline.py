@@ -1,0 +1,53 @@
+"""Roofline table from the dry-run artifacts (beyond-paper deliverable g).
+
+Reads results/dryrun_baseline.json (produced by
+``python -m repro.launch.dryrun --all --both-meshes --out ...``) and prints
+the per-(arch x shape x mesh) three-term roofline with the dominant
+bottleneck — the table EXPERIMENTS.md §Roofline embeds.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+
+_RESULTS = os.path.join(os.path.dirname(__file__), "..", "results")
+_CANDIDATES = ["dryrun_optimized.json", "dryrun_baseline_v2.json",
+               "dryrun_baseline.json"]
+DEFAULT = next((os.path.join(_RESULTS, c) for c in _CANDIDATES
+                if os.path.exists(os.path.join(_RESULTS, c))),
+               os.path.join(_RESULTS, _CANDIDATES[0]))
+
+
+def load(path=DEFAULT):
+    with open(path) as f:
+        return json.load(f)
+
+
+def main(path=DEFAULT):
+    if not os.path.exists(path):
+        emit("roofline_missing", 0.0,
+             "run: python -m repro.launch.dryrun --all --both-meshes "
+             "--out results/dryrun_baseline.json")
+        return
+    for r in load(path):
+        if r.get("skipped"):
+            emit(f"roofline_{r['arch']}_{r['shape']}", 0.0, "skipped")
+            continue
+        if r.get("error"):
+            emit(f"roofline_{r['arch']}_{r['shape']}", 0.0,
+                 f"ERROR={r['error'][:80]}")
+            continue
+        total = (r["compute_s"] + r["memory_s"] + r["collective_s"])
+        emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+             total * 1e6,
+             f"compute_ms={r['compute_s']*1e3:.2f};"
+             f"memory_ms={r['memory_s']*1e3:.2f};"
+             f"collective_ms={r['collective_s']*1e3:.2f};"
+             f"dominant={r['dominant'].replace('_s','')};"
+             f"useful_flops={r['useful_flops_frac']:.3f}")
+
+
+if __name__ == "__main__":
+    main()

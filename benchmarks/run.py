@@ -1,0 +1,43 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV lines.
+
+  fig2   bench_update       single-socket fused UPDATE (paper Fig. 2)
+  fig3/4 bench_scaling      epoch time/speedup vs ranks (Figs. 3 & 4)
+  fig5   bench_distdgl      DistGNN-MB vs DistDGL-like baseline (Fig. 5)
+  hec    bench_hec          HEC hit-rates (paper §4.4)
+  table3 bench_convergence  convergence parity (Table 3 / §4.5)
+  roofline                   dry-run roofline table (deliverable g)
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    only = sys.argv[1] if len(sys.argv) > 1 else None
+    from benchmarks import (bench_convergence, bench_distdgl, bench_hec,
+                            bench_scaling, bench_update, roofline)
+    suites = {
+        "fig2_update": bench_update.main,
+        "fig3_fig4_scaling": bench_scaling.main,
+        "fig5_distdgl": bench_distdgl.main,
+        "hec_hitrates": bench_hec.main,
+        "table3_convergence": bench_convergence.main,
+        "roofline": roofline.main,
+    }
+    print("name,us_per_call,derived")
+    for name, fn in suites.items():
+        if only and only not in name:
+            continue
+        try:
+            fn()
+        except Exception as e:
+            traceback.print_exc()
+            print(f"{name},0.0,ERROR={type(e).__name__}")
+            raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,49 @@
+"""Distributed GAT training with mode comparison (aep vs sync vs drop).
+
+Reproduces the paper's central claim in miniature: the HEC+AEP mode reaches
+the same accuracy as the blocking-fetch baseline while communicating
+asynchronously (and beats the drop-halos mode on accuracy).
+
+  PYTHONPATH=src python examples/distributed_gat.py
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import jax
+
+from repro.configs.gnn import small_gnn_config
+from repro.core import aep
+from repro.graph import partition_graph, synthetic_graph
+from repro.launch.mesh import make_gnn_mesh
+from repro.train.gnn_trainer import DistTrainer, build_dist_data, layer_dims
+
+RANKS = 4
+
+
+def main():
+    g = synthetic_graph(num_vertices=8_000, avg_degree=10, num_classes=8,
+                        feat_dim=32, seed=1)
+    ps = partition_graph(g, RANKS, seed=0)
+    for mode in ("aep", "sync", "drop"):
+        cfg = small_gnn_config("gat", batch_size=128, feat_dim=32,
+                               num_classes=8, lr=0.005)
+        dd = build_dist_data(ps, cfg)
+        tr = DistTrainer(cfg=cfg, mesh=make_gnn_mesh(RANKS),
+                         num_ranks=RANKS, mode=mode)
+        state = tr.init_state(jax.random.key(0))
+        state, hist = tr.train_epochs(ps, dd, state, num_epochs=6)
+        acc = tr.evaluate(ps, dd, state)
+        dims = layer_dims(cfg)
+        comm = (aep.aep_bytes_per_step(RANKS, cfg.num_layers,
+                                       cfg.hec.push_limit, dims)
+                if mode == "aep" else
+                aep.sync_bytes_per_step(RANKS, cfg.hec.push_limit,
+                                        cfg.feat_dim)
+                if mode == "sync" else 0)
+        tag = " (async, overlapped)" if mode == "aep" else \
+              " (blocking)" if mode == "sync" else ""
+        print(f"{mode:5s}: test_acc={acc:.3f} comm_bytes/step={comm}{tag}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+from repro.configs.base import ArchConfig, get_arch, list_archs, register
+from repro.configs.shapes import (InputShape, SHAPES, get_shape,
+                                  shape_applicable)
+
+__all__ = [
+    "ArchConfig", "get_arch", "list_archs", "register",
+    "InputShape", "SHAPES", "get_shape", "shape_applicable",
+]

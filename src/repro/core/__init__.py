@@ -1,0 +1,6 @@
+"""The paper's primary contribution: Historical Embedding Cache (hec) and
+Asynchronous Embedding Push (aep).  The distributed trainer wiring these
+into shard_map lives in repro.train.gnn_trainer."""
+from repro.core import aep, hec
+from repro.core.hec import (HECState, hec_init, hec_load, hec_lookup,
+                            hec_search, hec_store, hec_tick)

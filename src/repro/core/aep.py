@@ -1,0 +1,57 @@
+"""Asynchronous Embedding Push — analytic communication model + helpers.
+
+The AEP device algorithm itself (select solids per remote rank from
+db_halo, degree/reservoir sampling to nc, gather per-layer embeddings,
+all_to_all, delay-d in-flight queue) lives in
+``repro.train.gnn_trainer.DistTrainer._aep_push`` because it closes over
+the training step's captured activations.  This module holds the pieces
+that are independent of the step:
+
+* the delay-queue ADT used by the trainer,
+* analytic per-step communication volumes for AEP vs the DistDGL-like
+  sync baseline (used by benchmarks/bench_distdgl.py and the epoch-time
+  model in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def queue_init(delay: int, num_ranks: int, num_layers: int, nc: int,
+               dim_max: int):
+    """In-flight buffer: slot 0 is consumed this step; push appends at -1."""
+    return {
+        "tags": jnp.full((delay, num_ranks, num_layers, nc), -1, jnp.int32),
+        "embs": jnp.zeros((delay, num_ranks, num_layers, nc, dim_max),
+                          jnp.float32),
+    }
+
+
+def queue_pop_push(queue: dict, new_tags, new_embs) -> dict:
+    """Shift the queue by one step (slot 0 was consumed) and append."""
+    return {
+        "tags": jnp.concatenate([queue["tags"][1:], new_tags[None]], 0),
+        "embs": jnp.concatenate([queue["embs"][1:], new_embs[None]], 0),
+    }
+
+
+def aep_bytes_per_step(num_ranks: int, num_layers: int, nc: int,
+                       dims) -> int:
+    """Per-rank AEP all_to_all payload per step (tags + per-layer embs)."""
+    dmax = max(dims)
+    return num_ranks * num_layers * nc * (4 + 4 * dmax)
+
+
+def sync_bytes_per_step(num_ranks: int, nc_req: int, feat_dim: int) -> int:
+    """Per-rank blocking fetch: request tags + feature responses."""
+    return num_ranks * nc_req * (4 + 4 * (feat_dim + 1))
+
+
+def epoch_time_model(num_ranks: int, minibatches: int, compute_s: float,
+                     comm_bytes: int, link_bw: float = 50e9,
+                     overlap: bool = True) -> float:
+    """Paper §4.4 epoch-time structure: overlapped comm hides under compute
+    (AEP) vs serialized comm (sync baseline)."""
+    comm_s = comm_bytes / link_bw
+    per_mb = max(compute_s, comm_s) if overlap else compute_s + comm_s
+    return minibatches * per_mb

@@ -1,0 +1,4 @@
+from repro.graph.graph import Graph
+from repro.graph.synthetic import synthetic_graph
+from repro.graph.partition import partition_graph, Partition
+from repro.graph.sampling import sample_blocks, MinibatchBlocks

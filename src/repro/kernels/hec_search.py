@@ -1,0 +1,67 @@
+"""HECSearch Pallas kernel (paper §3.2: "We have optimized these management
+functions to perform lookup ... efficiently using OpenMP parallel regions").
+
+The TPU-native HECSearch: tags live in HBM as [nsets, ways]; each probe
+hashes its VID_o to a set, DMAs ONE set row via a scalar-prefetched
+BlockSpec index_map, and compares all ways in VREGs.  Probes are batched
+by the grid; the values gather (HECLoad) runs on the (set, way) pairs this
+kernel returns.
+
+Outputs per probe: hit flag and way index (set index is recomputed by the
+caller from the same hash — kept in sync with repro.core.hec._set_index).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_MIX = np.uint32(0x9E3779B1)
+
+
+def set_index(vids: jnp.ndarray, nsets: int) -> jnp.ndarray:
+    """Must match repro.core.hec._set_index."""
+    h = (vids.astype(jnp.uint32) * _MIX) >> np.uint32(8)
+    return (h % jnp.uint32(nsets)).astype(jnp.int32)
+
+
+def _search_kernel(sets_ref, vids_ref, tags_ref, hit_ref, way_ref):
+    i = pl.program_id(0)
+    vid = vids_ref[i]
+    row = tags_ref[...]                       # [1, ways]
+    match = row[0, :] == vid
+    any_hit = jnp.any(match) & (vid >= 0)
+    hit_ref[...] = any_hit.reshape(1, 1)
+    way_ref[...] = jnp.argmax(match).astype(jnp.int32).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hec_search_kernel(tags: jnp.ndarray, vids: jnp.ndarray, *,
+                      interpret=True):
+    """tags [nsets, ways] int32; vids [n] int32 -> (hit [n], set [n], way [n])."""
+    nsets, ways = tags.shape
+    n = vids.shape[0]
+    sets = set_index(vids, nsets)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, ways), lambda i, s, v: (s[i], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i, s, v: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, s, v: (i, 0)),
+        ],
+    )
+    hit, way = pl.pallas_call(
+        _search_kernel,
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((n, 1), jnp.bool_),
+                   jax.ShapeDtypeStruct((n, 1), jnp.int32)],
+        interpret=interpret,
+    )(sets, vids.astype(jnp.int32), tags)
+    return hit[:, 0], sets, way[:, 0]

@@ -1,0 +1,67 @@
+"""SAGE neighbor-aggregation Pallas kernel (paper's AGG primitive).
+
+AGG is the memory-bound half of GNN training (paper §3: byte-to-op >> 1).
+On CPU the paper leans on LIBXSMM gather/scatter primitives; the TPU-native
+shape of the same computation is a *scalar-prefetch gather-accumulate*:
+
+  * ``nbr_idx`` rides in SMEM (PrefetchScalarGridSpec) so the BlockSpec
+    index_map can route each grid step's DMA to an arbitrary source row —
+    the Pallas equivalent of an indexed gather from HBM,
+  * grid = (N_dst, fanout); the output tile for dst row i is revisited
+    fanout times and accumulated in VMEM, with the mean finalized by the
+    (cheap) division outside.
+
+Masked entries (idx < 0, or invalid source rows) contribute zero.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _agg_kernel(idx_ref, valid_ref, h_ref, sum_ref, cnt_ref, *, f: int):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    k = idx_ref[i * f + j]
+    ok = (k >= 0) & (valid_ref[jnp.maximum(k, 0)] > 0)
+
+    @pl.when(j == 0)
+    def _init():
+        sum_ref[...] = jnp.zeros_like(sum_ref)
+        cnt_ref[...] = jnp.zeros_like(cnt_ref)
+
+    okf = ok.astype(jnp.float32)
+    sum_ref[...] += h_ref[...].astype(jnp.float32) * okf
+    cnt_ref[...] += okf
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def sage_agg(h_src, nbr_idx, src_valid, *, interpret=True):
+    """h_src [N, D]; nbr_idx [M, f] (-1 pad); src_valid [N] bool -> [M, D]."""
+    N, D = h_src.shape
+    M, f = nbr_idx.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(M, f),
+        in_specs=[
+            pl.BlockSpec((1, D),
+                         lambda i, j, idx, valid: (jnp.maximum(idx[i * f + j], 0), 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, D), lambda i, j, idx, valid: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j, idx, valid: (i, 0)),
+        ],
+    )
+    s, c = pl.pallas_call(
+        functools.partial(_agg_kernel, f=f),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((M, D), jnp.float32),
+                   jax.ShapeDtypeStruct((M, 1), jnp.float32)],
+        interpret=interpret,
+    )(nbr_idx.reshape(-1).astype(jnp.int32),
+      src_valid.astype(jnp.int32), h_src)
+    return (s / jnp.maximum(c, 1.0)).astype(h_src.dtype)

@@ -1,0 +1,145 @@
+"""Training launcher.
+
+GNN (the paper's workload):
+  python -m repro.launch.train gnn --model graphsage --ranks 4 \
+      --vertices 20000 --epochs 5 --mode aep
+  (add XLA_FLAGS=--xla_force_host_platform_device_count=<ranks> when the
+   host has fewer real devices than ranks)
+
+LM (assigned architectures, reduced configs on CPU):
+  python -m repro.launch.train lm --arch minitron-4b --steps 20 \
+      --batch 4 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+
+def run_gnn(args):
+    import jax
+    import numpy as np
+    from repro.configs.gnn import (GAT_PAPERS100M, GRAPHSAGE_PAPERS100M,
+                                   HECConfig, small_gnn_config)
+    from repro.graph import partition_graph, synthetic_graph
+    from repro.launch.mesh import make_gnn_mesh
+    from repro.train import checkpoint
+    from repro.train.gnn_trainer import DistTrainer, build_dist_data
+
+    if jax.device_count() < args.ranks:
+        raise SystemExit(
+            f"need {args.ranks} devices, have {jax.device_count()}; set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={args.ranks}")
+
+    g = synthetic_graph(num_vertices=args.vertices, avg_degree=args.degree,
+                        num_classes=args.classes, feat_dim=args.feat_dim,
+                        seed=args.seed)
+    print(f"graph: V={g.num_vertices} E={g.num_edges} "
+          f"train={int(g.train_mask.sum())}")
+    ps = partition_graph(g, args.ranks, seed=args.seed)
+    print(f"partitioned into {args.ranks}: edge-cut={ps.edge_cut_frac:.3f} "
+          f"solids={[p.num_solid for p in ps.parts]}")
+    cfg = small_gnn_config(
+        args.model, batch_size=args.batch, feat_dim=args.feat_dim,
+        num_classes=args.classes, fanouts=tuple(args.fanouts),
+        hidden_size=args.hidden, num_hidden_layers=args.layers - 1,
+        lr=args.lr,
+        hec=HECConfig(cache_size=args.hec_size, ways=8,
+                      life_span=args.hec_ls, push_limit=args.hec_nc,
+                      delay=args.hec_delay))
+    dd = build_dist_data(ps, cfg)
+    mesh = make_gnn_mesh(args.ranks)
+    tr = DistTrainer(cfg=cfg, mesh=mesh, num_ranks=args.ranks,
+                     mode=args.mode)
+    state = tr.init_state(jax.random.key(args.seed))
+    t0 = time.time()
+    state, hist = tr.train_epochs(ps, dd, state, args.epochs, log_every=1)
+    dt = time.time() - t0
+    acc = tr.evaluate(ps, dd, state)
+    print(f"done: {args.epochs} epochs in {dt:.1f}s "
+          f"({dt/args.epochs:.2f}s/epoch); test_acc={acc:.3f}")
+    if args.ckpt:
+        checkpoint.save(args.ckpt, state["params"], int(state["step"]))
+        print("saved", args.ckpt)
+
+
+def run_lm(args):
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import get_arch
+    from repro.models.transformer import model as M
+    from repro.train import lm_trainer
+    from repro.train.optimizer import AdamConfig
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = M.init_params(jax.random.key(0), cfg)
+    from repro.train.optimizer import adam_init
+    opt = adam_init(params)
+    step = jax.jit(lm_trainer.make_train_step(cfg, AdamConfig(lr=args.lr)))
+    rng = jax.random.key(1)
+    t0 = time.time()
+    for i in range(args.steps):
+        rng, k = jax.random.split(rng)
+        tokens = jax.random.randint(k, (args.batch, args.seq), 0,
+                                    cfg.vocab_size)
+        batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, 1)}
+        if cfg.num_patch_tokens:
+            batch["patch_embeds"] = jnp.zeros(
+                (args.batch, cfg.num_patch_tokens, cfg.d_model), jnp.bfloat16)
+        if cfg.is_encoder_decoder:
+            batch["frame_embeds"] = jax.random.normal(
+                k, (args.batch, cfg.num_frame_tokens, cfg.d_model)
+            ).astype(jnp.bfloat16)
+        params, opt, metrics = step(params, opt, batch)
+        if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
+            print(f"step {i}: loss={float(metrics['loss']):.4f} "
+                  f"gnorm={float(metrics['grad_norm']):.3f}")
+    print(f"{args.steps} steps in {time.time()-t0:.1f}s")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    g = sub.add_parser("gnn")
+    g.add_argument("--model", default="graphsage",
+                   choices=["graphsage", "gat"])
+    g.add_argument("--mode", default="aep", choices=["aep", "sync", "drop"])
+    g.add_argument("--ranks", type=int, default=4)
+    g.add_argument("--vertices", type=int, default=20_000)
+    g.add_argument("--degree", type=int, default=10)
+    g.add_argument("--classes", type=int, default=16)
+    g.add_argument("--feat-dim", type=int, default=64)
+    g.add_argument("--hidden", type=int, default=128)
+    g.add_argument("--layers", type=int, default=2,
+                   help="GNN layers; --fanouts must list one per layer")
+    g.add_argument("--fanouts", type=int, nargs="+", default=[5, 10])
+    g.add_argument("--batch", type=int, default=256)
+    g.add_argument("--epochs", type=int, default=5)
+    g.add_argument("--lr", type=float, default=0.006)
+    g.add_argument("--seed", type=int, default=0)
+    g.add_argument("--hec-size", type=int, default=65536)
+    g.add_argument("--hec-nc", type=int, default=512)
+    g.add_argument("--hec-ls", type=int, default=2)
+    g.add_argument("--hec-delay", type=int, default=1)
+    g.add_argument("--ckpt", default=None)
+    g.set_defaults(fn=run_gnn)
+
+    l = sub.add_parser("lm")
+    l.add_argument("--arch", required=True)
+    l.add_argument("--reduced", action="store_true", default=True)
+    l.add_argument("--steps", type=int, default=20)
+    l.add_argument("--batch", type=int, default=4)
+    l.add_argument("--seq", type=int, default=128)
+    l.add_argument("--lr", type=float, default=3e-4)
+    l.set_defaults(fn=run_lm)
+
+    args = ap.parse_args()
+    args.fn(args)
+
+
+if __name__ == "__main__":
+    main()

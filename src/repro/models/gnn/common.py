@@ -1,0 +1,51 @@
+"""Shared GNN pieces: masked-neighbor gather/mean and deterministic dropout.
+
+Dropout uses a position-hash (threefry-free) mask so the Pallas fused-UPDATE
+kernel and this jnp reference produce bit-identical masks from the same seed
+— that is what lets tests assert exact equality through the fused path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_MIX1 = jnp.uint32(0x85EBCA6B)
+_MIX2 = jnp.uint32(0xC2B2AE35)
+
+
+def hash_uniform(seed: jnp.ndarray, rows: jnp.ndarray, cols: jnp.ndarray):
+    """Deterministic uniforms in [0,1) from (seed, row, col) int32s."""
+    h = (rows.astype(jnp.uint32)[:, None] * _MIX1) ^ \
+        (cols.astype(jnp.uint32)[None, :] * _MIX2) ^ seed.astype(jnp.uint32)
+    h = h ^ (h >> jnp.uint32(15))
+    h = h * _MIX1
+    h = h ^ (h >> jnp.uint32(13))
+    return (h >> jnp.uint32(8)).astype(jnp.float32) / jnp.float32(1 << 24)
+
+
+def hash_dropout(x: jnp.ndarray, rate: float, seed: jnp.ndarray):
+    """x [N, D]; deterministic mask; scales by 1/(1-rate)."""
+    if rate <= 0.0:
+        return x
+    u = hash_uniform(seed, jnp.arange(x.shape[0], dtype=jnp.int32),
+                     jnp.arange(x.shape[1], dtype=jnp.int32))
+    keep = u >= rate
+    return jnp.where(keep, x / (1.0 - rate), 0.0)
+
+
+def gather_neighbors(h_src: jnp.ndarray, nbr_idx: jnp.ndarray,
+                     src_valid: jnp.ndarray):
+    """h_src [N_src, D]; nbr_idx [N_dst, f] (-1 pad) ->
+    (feats [N_dst, f, D], mask [N_dst, f])."""
+    idx = jnp.maximum(nbr_idx, 0)
+    feats = h_src[idx]
+    mask = (nbr_idx >= 0) & src_valid[idx]
+    return feats, mask
+
+
+def masked_mean(feats: jnp.ndarray, mask: jnp.ndarray):
+    """feats [N, f, D]; mask [N, f] -> [N, D] (zero where no neighbors)."""
+    m = mask[..., None].astype(feats.dtype)
+    s = (feats * m).sum(axis=1)
+    cnt = m.sum(axis=1)
+    return s / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,81 @@
+"""GAT (paper eq. 2, with the paper's modification: bias + non-linearity
+applied to the projection BEFORE computing attention coefficients):
+
+    z_u = ReLU(W f_u + b)
+    e_u = a_u . z_u ;  e_v = a_v . z_v
+    alpha_uv = EdgeSoftmax(LeakyReLU(e_u + e_v))
+    h_v = sum_u alpha_uv z_u
+
+The per-head broadcast edge-softmax aggregation is the operation the paper
+adds SIMD broadcast support for (LIBXSMM); the Pallas analogue is
+kernels/gat_edge.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.gnn.common import gather_neighbors, hash_dropout
+
+
+def init_params(key, feat_dim: int, hidden: int, num_classes: int,
+                num_layers: int, num_heads: int):
+    layers = []
+    dims_in = [feat_dim] + [hidden * num_heads] * (num_layers - 1)
+    dims_out = [hidden] * (num_layers - 1) + [num_classes]
+    heads = [num_heads] * (num_layers - 1) + [1]
+    for l in range(num_layers):
+        k1, k2, k3, key = jax.random.split(key, 4)
+        din, dh, H = dims_in[l], dims_out[l], heads[l]
+        s = (2.0 / din) ** 0.5
+        layers.append({
+            "w": jax.random.normal(k1, (din, H, dh), jnp.float32) * s,
+            "b": jnp.zeros((H, dh), jnp.float32),
+            "a_u": jax.random.normal(k2, (H, dh), jnp.float32) * dh ** -0.5,
+            "a_v": jax.random.normal(k3, (H, dh), jnp.float32) * dh ** -0.5,
+        })
+    return {"layers": layers}
+
+
+def gat_layer(p, h_src, nbr_idx, valid, *, use_kernel=False,
+              interpret=True):
+    """h_src [N_src, din] -> h_dst [N_dst, H*dh] (pre-dropout)."""
+    z = jax.nn.relu(jnp.einsum("nd,dhe->nhe", h_src, p["w"]) + p["b"])
+    e_u = (z * p["a_u"]).sum(-1)                       # [N_src, H]
+    e_v = (z * p["a_v"]).sum(-1)
+    n_dst = nbr_idx.shape[0]
+    if use_kernel:
+        from repro.kernels import ops as kops
+        h = kops.gat_edge_aggregate(z, e_u, e_v, nbr_idx, valid,
+                                    interpret=interpret)
+    else:
+        idx = jnp.maximum(nbr_idx, 0)
+        mask = (nbr_idx >= 0) & valid[idx]             # [N_dst, f]
+        scores = jax.nn.leaky_relu(
+            e_u[idx] + e_v[:n_dst, None, :], 0.2)      # [N_dst, f, H]
+        scores = jnp.where(mask[..., None], scores, -1e30)
+        alpha = jax.nn.softmax(scores, axis=1)
+        alpha = jnp.where(mask[..., None], alpha, 0.0)
+        h = jnp.einsum("nfh,nfhe->nhe", alpha, z[idx])  # [N_dst, H, dh]
+    return h.reshape(n_dst, -1)
+
+
+def forward(params, h0, valid0, blocks, *, dropout: float = 0.0,
+            seed=None, halo_hook=None, use_kernel: bool = False):
+    seed = jnp.uint32(0) if seed is None else seed
+    h, valid = h0, valid0
+    if halo_hook is not None:
+        h, valid = halo_hook(0, h, valid)
+    L = len(params["layers"])
+    for k in range(L):
+        nbr = blocks["nbr_idx"][k]
+        h_new = gat_layer(params["layers"][k], h, nbr, valid,
+                          use_kernel=use_kernel)
+        last = k == L - 1
+        if not last and dropout > 0:
+            h_new = hash_dropout(h_new, dropout, seed + jnp.uint32(k + 1))
+        valid = valid[:nbr.shape[0]]
+        if halo_hook is not None and not last:
+            h_new, valid = halo_hook(k + 1, h_new, valid)
+        h = h_new
+    return h, valid

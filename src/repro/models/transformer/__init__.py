@@ -1,0 +1,4 @@
+from repro.models.transformer import model
+from repro.models.transformer.model import (init_params, param_axes, forward,
+                                            decode_step, init_cache,
+                                            cache_axes, logits_from_hidden)

@@ -1,0 +1,163 @@
+"""Attention: GQA/MHA/SWA, q-chunked (memory-bounded), KV cache + ring buffer.
+
+Masking is entirely position-driven: every KV slot carries an absolute
+position (``kv_pos``, -1 = empty), every query carries ``q_pos``.  The same
+code therefore serves causal training, non-causal encoding, 32k prefill,
+single-token decode against a linear cache, and SWA decode against a
+ring-buffer cache (where slot order is NOT position order).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer.sharding import _current_mesh, constrain
+
+NEG_INF = -1e30
+
+
+import os
+
+
+def _opt_disabled(name: str) -> bool:
+    """Beyond-paper optimizations are on by default; EXPERIMENTS.md §Perf
+    baselines re-measure with REPRO_DISABLE_OPT=cp_attn,mlstm_shard,..."""
+    return name in os.environ.get("REPRO_DISABLE_OPT", "").split(",")
+
+
+def _q_axes(num_heads: int):
+    """Sharding for q/attention-out [B, T, H, dh].
+
+    Heads shard over "model" when divisible; otherwise fall back to
+    context parallelism — shard the query-sequence dim over "model" so
+    attention work/memory still splits 16 ways (EXPERIMENTS.md §Perf
+    iter 2: minitron's 24 and qwen's 28 heads on a 16-way model axis were
+    fully replicated, making attention the dominant memory term).
+    """
+    mesh = _current_mesh()
+    msize = 1
+    if mesh is not None and "model" in mesh.axis_names:
+        msize = mesh.shape["model"]
+    if num_heads % msize == 0 or _opt_disabled("cp_attn"):
+        return ("batch", None, "heads", None)
+    return ("batch", "seq_model", "heads", None)
+
+
+def dot_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  q_pos: jnp.ndarray, kv_pos: jnp.ndarray, *,
+                  causal: bool = True,
+                  window: Optional[int] = None,
+                  softcap: Optional[float] = None,
+                  q_chunk: int = 512) -> jnp.ndarray:
+    """q: [B,T,H,dh]; k,v: [B,S,KV,dh]; q_pos: [B,T]; kv_pos: [B,S] -> [B,T,H,dh].
+
+    Queries are processed in chunks of ``q_chunk`` via lax.map so the
+    materialized score tensor is [B, q_chunk, H, S] instead of [B, T, H, S]
+    (at 32k x 32k the un-chunked scores would be ~4 GB/device-head).
+    """
+    B, T, H, dh = q.shape
+    S, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = dh ** -0.5
+
+    qax = _q_axes(H)
+
+    def on_chunk(qc, qpc):
+        # qc: [B,c,H,dh] -> [B,c,KV,G,dh]
+        c = qc.shape[1]
+        qc = constrain(qc, qax)
+        qg = qc.reshape(B, c, KV, G, dh)
+        # NOTE: do NOT constrain scores here — q's ("heads" -> model)
+        # sharding propagates through the [B,c,KV,G,S] reshape as a
+        # (KV x G) factorization; pinning kv_heads would force replication
+        # whenever kv_heads < model-axis size (EXPERIMENTS.md §Perf iter 1).
+        scores = jnp.einsum("btkgd,bskd->btkgs", qg, k,
+                            preferred_element_type=jnp.float32) * scale
+        if _opt_disabled("scores_unpinned"):   # baseline behavior for §Perf
+            scores = constrain(scores, ("batch", None, "kv_heads", None, None))
+        if softcap is not None:
+            scores = jnp.tanh(scores / softcap) * softcap
+        mask = (kv_pos >= 0)[:, None, None, None, :]
+        if causal:
+            mask &= qpc[:, :, None, None, None] >= kv_pos[:, None, None, None, :]
+        if window is not None:
+            mask &= (qpc[:, :, None, None, None] - kv_pos[:, None, None, None, :]
+                     ) < window
+        scores = jnp.where(mask, scores, NEG_INF)
+        p = jax.nn.softmax(scores, axis=-1)
+        p = jnp.where(mask.any(axis=-1, keepdims=True), p, 0.0)  # fully-masked rows
+        out = jnp.einsum("btkgs,bskd->btkgd", p.astype(v.dtype), v)
+        return constrain(out.reshape(B, c, H, dh), qax)
+
+    if T <= q_chunk:
+        return on_chunk(q, q_pos)
+
+    pad = (-T) % q_chunk
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, ((0, 0), (0, pad)), constant_values=-1)
+    n = q.shape[1] // q_chunk
+    qs = jnp.moveaxis(q.reshape(B, n, q_chunk, H, dh), 1, 0)
+    qps = jnp.moveaxis(q_pos.reshape(B, n, q_chunk), 1, 0)
+    outs = jax.lax.map(lambda args: on_chunk(*args), (qs, qps))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, n * q_chunk, H, dh)
+    return out[:, :T]
+
+
+# ---------------------------------------------------------------------------
+# KV cache
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class KVCache:
+    """Per-layer cache. ``ring=True`` (SWA) wraps writes modulo cache length."""
+    k: jnp.ndarray        # [B, S, KV, dh]
+    v: jnp.ndarray        # [B, S, KV, dh]
+    pos: jnp.ndarray      # [B, S] int32 absolute positions, -1 = empty
+    ring: bool = dataclasses.field(metadata=dict(static=True), default=False)
+
+    @staticmethod
+    def init(batch: int, length: int, kv_heads: int, head_dim: int,
+             dtype=jnp.bfloat16, ring: bool = False) -> "KVCache":
+        return KVCache(
+            k=jnp.zeros((batch, length, kv_heads, head_dim), dtype),
+            v=jnp.zeros((batch, length, kv_heads, head_dim), dtype),
+            pos=jnp.full((batch, length), -1, jnp.int32),
+            ring=ring)
+
+    def update(self, k_new: jnp.ndarray, v_new: jnp.ndarray,
+               pos: jnp.ndarray) -> "KVCache":
+        """Insert one step. k_new/v_new: [B,1,KV,dh]; pos: scalar int32."""
+        S = self.k.shape[1]
+        idx = jnp.where(self.ring, pos % S, jnp.minimum(pos, S - 1))
+        k = jax.lax.dynamic_update_slice_in_dim(self.k, k_new.astype(self.k.dtype), idx, 1)
+        v = jax.lax.dynamic_update_slice_in_dim(self.v, v_new.astype(self.v.dtype), idx, 1)
+        p = jax.lax.dynamic_update_slice_in_dim(
+            self.pos, jnp.full((self.pos.shape[0], 1), pos, jnp.int32), idx, 1)
+        return dataclasses.replace(self, k=k, v=v, pos=p)
+
+    @staticmethod
+    def from_prefill(k: jnp.ndarray, v: jnp.ndarray, length: int,
+                     ring: bool = False) -> "KVCache":
+        """Build a cache of ``length`` slots from full-sequence prefill k/v."""
+        B, T = k.shape[0], k.shape[1]
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+        if T >= length:          # keep the trailing window
+            k, v = k[:, T - length:], v[:, T - length:]
+            positions = positions[:, T - length:]
+            if ring:
+                # place position p at slot p % length so future ring writes
+                # evict oldest-first (slot order must equal p % length order)
+                shift = (T - length) % length
+                k = jnp.roll(k, shift, axis=1)
+                v = jnp.roll(v, shift, axis=1)
+                positions = jnp.roll(positions, shift, axis=1)
+            return KVCache(k=k, v=v, pos=positions, ring=ring)
+        pad = length - T
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        positions = jnp.pad(positions, ((0, 0), (0, pad)), constant_values=-1)
+        return KVCache(k=k, v=v, pos=positions, ring=ring)

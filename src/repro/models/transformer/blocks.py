@@ -1,0 +1,177 @@
+"""Attention-family transformer blocks (global GQA / SWA / local / +MoE FFN,
+optional cross-attention for enc-dec decoders)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cfgbase
+from repro.models.transformer import moe as moe_lib
+from repro.models.transformer.attention import KVCache, dot_attention
+from repro.models.transformer.rope import apply_rope, rope_angles
+from repro.models.transformer.xlstm import rms_norm
+
+
+def block_window(cfg, block_type: str) -> Optional[int]:
+    if block_type in (cfgbase.ATTN_SWA, cfgbase.ATTN_SWA_MOE):
+        return cfg.sliding_window
+    if block_type == cfgbase.LOCAL_ATTN:
+        return cfg.local_window
+    return None
+
+
+def init_attn_block(key, cfg, block_type: str, cross: bool = False):
+    d, H, KV, dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 12)
+    s = d ** -0.5
+    so = (H * dh) ** -0.5
+    p = {
+        "ln1": jnp.ones((d,), jnp.float32),
+        "wq": jax.random.normal(ks[0], (d, H, dh), jnp.float32) * s,
+        "wk": jax.random.normal(ks[1], (d, KV, dh), jnp.float32) * s,
+        "wv": jax.random.normal(ks[2], (d, KV, dh), jnp.float32) * s,
+        "wo": jax.random.normal(ks[3], (H, dh, d), jnp.float32) * so,
+        "ln2": jnp.ones((d,), jnp.float32),
+    }
+    a = {
+        "ln1": (None,),
+        "wq": ("embed", "heads", None),
+        "wk": ("embed", "kv_heads", None),
+        "wv": ("embed", "kv_heads", None),
+        "wo": ("heads", None, "embed"),
+        "ln2": (None,),
+    }
+    if cfg.use_bias:
+        p.update(bq=jnp.zeros((H, dh)), bk=jnp.zeros((KV, dh)),
+                 bv=jnp.zeros((KV, dh)))
+        a.update(bq=("heads", None), bk=("kv_heads", None), bv=("kv_heads", None))
+    if block_type in cfgbase.MOE_BLOCKS:
+        p["moe"], a["moe"] = moe_lib.init_moe(ks[4], cfg)
+    else:
+        f = cfg.d_ff
+        p.update(
+            w_in=jax.random.normal(ks[5], (d, f), jnp.float32) * s,
+            w_gate=jax.random.normal(ks[6], (d, f), jnp.float32) * s,
+            w_out=jax.random.normal(ks[7], (f, d), jnp.float32) * f ** -0.5,
+        )
+        a.update(w_in=("embed", "mlp"), w_gate=("embed", "mlp"),
+                 w_out=("mlp", "embed"))
+    if cross:
+        p.update(
+            lnx=jnp.ones((d,), jnp.float32),
+            xwq=jax.random.normal(ks[8], (d, H, dh), jnp.float32) * s,
+            xwk=jax.random.normal(ks[9], (d, KV, dh), jnp.float32) * s,
+            xwv=jax.random.normal(ks[10], (d, KV, dh), jnp.float32) * s,
+            xwo=jax.random.normal(ks[11], (H, dh, d), jnp.float32) * so,
+        )
+        a.update(lnx=(None,), xwq=("embed", "heads", None),
+                 xwk=("embed", "kv_heads", None), xwv=("embed", "kv_heads", None),
+                 xwo=("heads", None, "embed"))
+    return p, a
+
+
+def _qkv(params, xn, cfg, prefix=""):
+    dt = xn.dtype
+    q = jnp.einsum("btd,dhk->bthk", xn, params[prefix + "wq"].astype(dt))
+    k = jnp.einsum("btd,dhk->bthk", xn, params[prefix + "wk"].astype(dt))
+    v = jnp.einsum("btd,dhk->bthk", xn, params[prefix + "wv"].astype(dt))
+    if cfg.use_bias and not prefix:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    return q, k, v
+
+
+def _ffn(params, x, cfg, block_type):
+    if block_type in cfgbase.MOE_BLOCKS:
+        return moe_lib.apply_moe(params["moe"], x, cfg)
+    dt = x.dtype
+    h = x @ params["w_in"].astype(dt)
+    g = jax.nn.silu(x @ params["w_gate"].astype(dt))
+    return (h * g) @ params["w_out"].astype(dt)
+
+
+def apply_attn_block(params, x, cfg, block_type, positions, mode,
+                     cache=None, pos=None, enc_out=None, causal=True):
+    """x: [B,T,d]. Returns (y, new_cache).
+
+    mode: train | encode (no cache) | prefill (build cache) | decode (use it).
+    cache: {"kv": KVCache, ["xk","xv" for cross]} or None.
+    """
+    dt = x.dtype
+    B, T, d = x.shape
+    window = block_window(cfg, block_type)
+    xn = rms_norm(x, params["ln1"], cfg.norm_eps)
+    q, k, v = _qkv(params, xn, cfg)
+
+    new_cache = dict(cache) if cache is not None else None
+    if mode == "decode":
+        angles = rope_angles(positions, cfg.head_dim, cfg.rope_theta,
+                             cfg.mrope_sections)
+        q = apply_rope(q, angles)
+        k = apply_rope(k, angles)
+        kv: KVCache = cache["kv"]
+        kv = kv.update(k, v, pos)
+        new_cache["kv"] = kv
+        q_pos = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+        attn = dot_attention(q, kv.k, kv.v, q_pos, kv.pos, causal=True,
+                             window=window, softcap=cfg.attn_logit_softcap,
+                             q_chunk=cfg.q_chunk)
+    else:
+        angles = rope_angles(positions, cfg.head_dim, cfg.rope_theta,
+                             cfg.mrope_sections)
+        q = apply_rope(q, angles)
+        k = apply_rope(k, angles)
+        q_pos = positions if positions.ndim == 2 else positions[:, 0]
+        kv_pos = q_pos
+        attn = dot_attention(q, k, v, q_pos.astype(jnp.int32),
+                             kv_pos.astype(jnp.int32),
+                             causal=causal and mode != "encode", window=window,
+                             softcap=cfg.attn_logit_softcap, q_chunk=cfg.q_chunk)
+        if mode == "prefill":
+            cache_len = min(T, window) if window else T
+            new_cache = new_cache or {}
+            new_cache["kv"] = KVCache.from_prefill(k, v, cache_len,
+                                                   ring=window is not None)
+
+    y = jnp.einsum("bthk,hkd->btd", attn, params["wo"].astype(dt))
+    x = x + y
+
+    # cross-attention (enc-dec decoder)
+    if "xwq" in params:
+        xn2 = rms_norm(x, params["lnx"], cfg.norm_eps)
+        qx = jnp.einsum("btd,dhk->bthk", xn2, params["xwq"].astype(dt))
+        if mode == "decode":
+            kx, vx = cache["xk"], cache["xv"]
+        else:
+            kx = jnp.einsum("btd,dhk->bthk", enc_out.astype(dt),
+                            params["xwk"].astype(dt))
+            vx = jnp.einsum("btd,dhk->bthk", enc_out.astype(dt),
+                            params["xwv"].astype(dt))
+            if mode == "prefill":
+                new_cache["xk"], new_cache["xv"] = kx, vx
+        S = kx.shape[1]
+        qp = jnp.zeros((B, qx.shape[1]), jnp.int32)
+        kp = jnp.zeros((B, S), jnp.int32)
+        xattn = dot_attention(qx, kx, vx, qp, kp, causal=False,
+                              q_chunk=cfg.q_chunk)
+        x = x + jnp.einsum("bthk,hkd->btd", xattn, params["xwo"].astype(dt))
+
+    # FFN / MoE
+    xn3 = rms_norm(x, params["ln2"], cfg.norm_eps)
+    x = x + _ffn(params, xn3, cfg, block_type)
+    return x, new_cache
+
+
+def init_attn_cache(cfg, batch, cache_len, block_type, dtype,
+                    cross_len: int = 0):
+    window = block_window(cfg, block_type)
+    length = min(cache_len, window) if window else cache_len
+    c = {"kv": KVCache.init(batch, length, cfg.num_kv_heads, cfg.head_dim,
+                            dtype, ring=window is not None)}
+    if cross_len:
+        c["xk"] = jnp.zeros((batch, cross_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+        c["xv"] = jnp.zeros((batch, cross_len, cfg.num_kv_heads, cfg.head_dim), dtype)
+    return c

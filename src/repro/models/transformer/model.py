@@ -1,0 +1,321 @@
+"""Model assembly for the assigned architectures.
+
+A model is a list of *segments*; each segment is a repeating *unit* (the
+config's block pattern) scanned ``count`` times with stacked params — this
+keeps HLO size ~constant in depth, which matters when compiling 34 dry-run
+combos for a 512-device mesh on one CPU.
+
+Four entry modes share the block implementations:
+  train   — full-sequence forward (remat over units), no caches
+  encode  — encoder stack (bidirectional), audio enc-dec only
+  prefill — full-sequence forward that also EMITS per-layer caches
+  decode  — one token in, caches consumed/updated via scan ys
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cfgbase
+from repro.models.transformer import blocks as blk
+from repro.models.transformer import rglru as rglru_lib
+from repro.models.transformer import xlstm as xlstm_lib
+from repro.models.transformer.xlstm import rms_norm
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# structure
+# ---------------------------------------------------------------------------
+def segments_spec(cfg) -> list[tuple[tuple[str, ...], int]]:
+    segs = [(tuple(cfg.pattern), cfg.num_units)]
+    if cfg.remainder:
+        segs.append((tuple(cfg.remainder), 1))
+    return segs
+
+
+def _init_block(key, cfg, block_type: str, cross: bool):
+    if block_type in cfgbase.ATTENTION_BLOCKS:
+        return blk.init_attn_block(key, cfg, block_type, cross=cross)
+    if block_type == cfgbase.MLSTM:
+        return xlstm_lib.init_mlstm_block(key, cfg)
+    if block_type == cfgbase.SLSTM:
+        return xlstm_lib.init_slstm_block(key, cfg)
+    if block_type == cfgbase.RGLRU:
+        return rglru_lib.init_rglru_block(key, cfg)
+    raise ValueError(block_type)
+
+
+def _init_unit(key, cfg, pattern, cross: bool):
+    ks = jax.random.split(key, len(pattern))
+    return {f"b{i}": _init_block(ks[i], cfg, bt, cross)[0]
+            for i, bt in enumerate(pattern)}
+
+
+def _tiny(cfg):
+    """Structure-preserving minimal clone used ONLY to read out axes trees."""
+    import dataclasses
+    return dataclasses.replace(
+        cfg, name=cfg.name + "-axesprobe",
+        num_layers=len(cfg.pattern) + len(cfg.remainder), num_units=1,
+        d_model=max(2 * cfg.num_heads, 8) if False else 64,
+        num_heads=4 if cfg.num_heads >= 4 else cfg.num_heads,
+        num_kv_heads=min(cfg.num_kv_heads, 4 if cfg.num_heads >= 4 else cfg.num_heads),
+        head_dim=16, d_ff=32 if cfg.d_ff else 0,
+        vocab_size=64,
+        num_experts=min(cfg.num_experts, 2) if cfg.num_experts else 0,
+        rnn_width=32, num_encoder_layers=min(cfg.num_encoder_layers, 1),
+        mrope_sections=(4, 2, 2) if cfg.mrope_sections else None,
+        moe_group_size=16,
+    )
+
+
+def _unit_axes(cfg, pattern, cross: bool):
+    tiny = _tiny(cfg)
+    key = jax.random.key(0)
+    return {f"b{i}": _init_block(key, tiny, bt, cross)[1]
+            for i, bt in enumerate(pattern)}
+
+
+def init_params(key, cfg) -> Params:
+    ks = jax.random.split(key, 8)
+    d, V = cfg.d_model, cfg.vocab_size
+    params = {
+        "embed": (jax.random.normal(ks[0], (V, d), jnp.float32) * d ** -0.5),
+        "final_ln": jnp.ones((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = jax.random.normal(ks[1], (d, V), jnp.float32) * d ** -0.5
+    cross = cfg.is_encoder_decoder
+    for si, (pattern, count) in enumerate(segments_spec(cfg)):
+        seg_keys = jax.random.split(ks[2 + si], count)
+        params[f"seg{si}"] = jax.vmap(
+            lambda k: _init_unit(k, cfg, pattern, cross))(seg_keys)
+    if cfg.is_encoder_decoder:
+        enc_keys = jax.random.split(ks[6], cfg.num_encoder_layers)
+        params["encoder"] = {
+            "stack": jax.vmap(
+                lambda k: _init_unit(k, cfg, (cfgbase.ATTN,), False))(enc_keys),
+            "final_ln": jnp.ones((d,), jnp.float32),
+        }
+    return params
+
+
+def param_axes(cfg):
+    axes = {
+        "embed": ("vocab", "embed"),
+        "final_ln": (None,),
+    }
+    if not cfg.tie_embeddings:
+        axes["unembed"] = ("embed", "vocab")
+    cross = cfg.is_encoder_decoder
+    for si, (pattern, count) in enumerate(segments_spec(cfg)):
+        ua = _unit_axes(cfg, pattern, cross)
+        axes[f"seg{si}"] = jax.tree_util.tree_map(
+            lambda a: ("layers",) + tuple(a), ua,
+            is_leaf=lambda x: isinstance(x, tuple) and
+            all(e is None or isinstance(e, str) for e in x))
+    if cfg.is_encoder_decoder:
+        ua = _unit_axes(cfg, (cfgbase.ATTN,), False)
+        axes["encoder"] = {
+            "stack": jax.tree_util.tree_map(
+                lambda a: ("layers",) + tuple(a), ua,
+                is_leaf=lambda x: isinstance(x, tuple) and
+                all(e is None or isinstance(e, str) for e in x)),
+            "final_ln": (None,),
+        }
+    return axes
+
+
+# ---------------------------------------------------------------------------
+# block dispatch
+# ---------------------------------------------------------------------------
+def _apply_block(bp, x, cfg, bt, positions, mode, cache, pos, enc_out,
+                 causal=True):
+    if bt in cfgbase.ATTENTION_BLOCKS:
+        return blk.apply_attn_block(bp, x, cfg, bt, positions, mode,
+                                    cache, pos, enc_out, causal=causal)
+    if bt == cfgbase.MLSTM:
+        return xlstm_lib.apply_mlstm_block(bp, x, cfg, cache, mode)
+    if bt == cfgbase.SLSTM:
+        y, st = xlstm_lib.apply_slstm_block(bp, x, cfg, cache, mode)
+        return y, st
+    if bt == cfgbase.RGLRU:
+        return rglru_lib.apply_rglru_block(bp, x, cfg, cache, mode)
+    raise ValueError(bt)
+
+
+def _run_segment(seg_params, x, cfg, pattern, mode, positions,
+                 seg_cache=None, pos=None, enc_out=None, causal=True):
+    """Scan the unit over its stacked params. Returns (x, new_seg_cache)."""
+    use_cache = mode in ("prefill", "decode")
+
+    def unit_body(carry, xs):
+        x = carry
+        if mode == "decode":
+            up, uc = xs
+        else:
+            up, uc = xs, None
+        new_uc = {}
+        for i, bt in enumerate(pattern):
+            bc = uc[f"b{i}"] if uc is not None else None
+            x, nc = _apply_block(up[f"b{i}"], x, cfg, bt, positions, mode,
+                                 bc, pos, enc_out, causal=causal)
+            new_uc[f"b{i}"] = nc
+        return x, (new_uc if use_cache else None)
+
+    body = unit_body
+    if cfg.remat and mode == "train":
+        body = jax.checkpoint(unit_body)
+    xs = (seg_params, seg_cache) if mode == "decode" else seg_params
+    x, caches = jax.lax.scan(body, x, xs)
+    return x, caches
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+def encode(params, cfg, frame_embeds, mode="encode"):
+    """Audio encoder: frame_embeds [B,F,d] -> [B,F,d]."""
+    B, F, _ = frame_embeds.shape
+    positions = jnp.broadcast_to(jnp.arange(F, dtype=jnp.int32), (B, F))
+    x, _ = _run_segment(params["encoder"]["stack"], frame_embeds, cfg,
+                        (cfgbase.ATTN,), "train", positions, causal=False)
+    return rms_norm(x, params["encoder"]["final_ln"], cfg.norm_eps)
+
+
+def embed_inputs(params, cfg, tokens, extra):
+    """Token embedding + modality stubs. Returns (x, positions)."""
+    from repro.models.transformer.sharding import constrain
+    dt = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(dt)[tokens] * (cfg.d_model ** 0.5)
+    x = constrain(x, ("batch", None, None))
+    B, T = tokens.shape
+    if cfg.num_patch_tokens and extra is not None and "patch_embeds" in extra:
+        patches = extra["patch_embeds"].astype(dt)          # [B,P,d]
+        x = jnp.concatenate([patches, x], axis=1)
+        T = x.shape[1]
+    if cfg.mrope_sections is not None:
+        if extra is not None and "positions" in extra:
+            positions = extra["positions"]                  # [B,3,T]
+        else:
+            positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32),
+                                         (B, 3, T))
+    else:
+        positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    return x, positions
+
+
+def forward(params, cfg, tokens, extra=None, mode="train"):
+    """Full-sequence forward.
+
+    Returns hidden [B,T',d] for train; (hidden, cache) for prefill.
+    T' includes prepended patch tokens for VLM.
+    """
+    x, positions = embed_inputs(params, cfg, tokens, extra)
+    enc_out = None
+    if cfg.is_encoder_decoder:
+        enc_out = encode(params, cfg, extra["frame_embeds"])
+    caches = []
+    for si, (pattern, count) in enumerate(segments_spec(cfg)):
+        x, c = _run_segment(params[f"seg{si}"], x, cfg, pattern, mode,
+                            positions, pos=None, enc_out=enc_out)
+        caches.append(c)
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    if mode == "prefill":
+        return x, caches
+    return x
+
+
+def logits_from_hidden(params, cfg, h):
+    dt = h.dtype
+    if cfg.tie_embeddings:
+        return jnp.einsum("btd,vd->btv", h, params["embed"].astype(dt),
+                          preferred_element_type=jnp.float32)
+    return jnp.einsum("btd,dv->btv", h, params["unembed"].astype(dt),
+                      preferred_element_type=jnp.float32)
+
+
+def decode_step(params, cfg, caches, token, pos, extra=None):
+    """token: [B,1] int32; pos: scalar int32. Returns (logits [B,1,V], caches)."""
+    dt = jnp.dtype(cfg.dtype)
+    x = params["embed"].astype(dt)[token] * (cfg.d_model ** 0.5)
+    B = token.shape[0]
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(pos, (B, 3, 1)).astype(jnp.int32)
+    else:
+        positions = jnp.broadcast_to(pos, (B, 1)).astype(jnp.int32)
+    new_caches = []
+    for si, (pattern, count) in enumerate(segments_spec(cfg)):
+        x, c = _run_segment(params[f"seg{si}"], x, cfg, pattern, "decode",
+                            positions, seg_cache=caches[si], pos=pos)
+        new_caches.append(c)
+    x = rms_norm(x, params["final_ln"], cfg.norm_eps)
+    return logits_from_hidden(params, cfg, x), new_caches
+
+
+# ---------------------------------------------------------------------------
+# caches
+# ---------------------------------------------------------------------------
+def _init_block_cache(cfg, bt, batch, cache_len, dtype, cross_len):
+    if bt in cfgbase.ATTENTION_BLOCKS:
+        return blk.init_attn_cache(cfg, batch, cache_len, bt, dtype, cross_len)
+    if bt == cfgbase.MLSTM:
+        return xlstm_lib.init_mlstm_cache(cfg, batch, dtype)
+    if bt == cfgbase.SLSTM:
+        return xlstm_lib.init_slstm_cache(cfg, batch, dtype)
+    if bt == cfgbase.RGLRU:
+        return rglru_lib.init_rglru_cache(cfg, batch, dtype)
+    raise ValueError(bt)
+
+
+def init_cache(cfg, batch, cache_len, dtype=None):
+    """Caches matching forward()'s segment structure, stacked over units."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    cross_len = (cfg.num_frame_tokens if cfg.is_encoder_decoder else 0)
+    caches = []
+    for pattern, count in segments_spec(cfg):
+        unit = {f"b{i}": _init_block_cache(cfg, bt, batch, cache_len, dtype,
+                                           cross_len)
+                for i, bt in enumerate(pattern)}
+        caches.append(jax.tree_util.tree_map(
+            lambda a: jnp.tile(a[None], (count,) + (1,) * a.ndim), unit))
+    return caches
+
+
+def cache_axes(cfg):
+    """Logical axes for every cache leaf (mirrors init_cache structure)."""
+    def attn_axes(bt, cross):
+        from repro.models.transformer.attention import KVCache
+        c = {"kv": KVCache(k=("layers", "batch", "long_seq", "kv_heads", None),
+                           v=("layers", "batch", "long_seq", "kv_heads", None),
+                           pos=("layers", "batch", "long_seq"),
+                           ring=blk.block_window(cfg, bt) is not None)}
+        if cross:
+            c["xk"] = ("layers", "batch", None, "kv_heads", None)
+            c["xv"] = ("layers", "batch", None, "kv_heads", None)
+        return c
+
+    def block_axes(bt):
+        cross = cfg.is_encoder_decoder
+        if bt in cfgbase.ATTENTION_BLOCKS:
+            return attn_axes(bt, cross)
+        if bt == cfgbase.MLSTM:
+            return ((("layers", "batch", "heads", None, None),
+                     ("layers", "batch", "heads", None),
+                     ("layers", "batch", "heads")),
+                    ("layers", "batch", None, "rnn"))
+        if bt == cfgbase.SLSTM:
+            return (("layers", "batch", "rnn"), ("layers", "batch", "rnn"),
+                    ("layers", "batch", "rnn"), ("layers", "batch", "heads"))
+        if bt == cfgbase.RGLRU:
+            return (("layers", "batch", "rnn"),
+                    ("layers", "batch", None, "rnn"))
+        raise ValueError(bt)
+
+    return [{f"b{i}": block_axes(bt) for i, bt in enumerate(pattern)}
+            for pattern, _ in segments_spec(cfg)]

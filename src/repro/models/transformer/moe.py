@@ -1,0 +1,158 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-bounded dispatch.
+
+Two dispatch implementations, selectable via ``cfg.moe_impl``:
+
+* ``einsum`` — GShard/Switch-style one-hot dispatch/combine tensors of shape
+  [groups, group_size, experts, capacity].  This is the paper-era baseline;
+  its dispatch tensors dominate HLO bytes at scale.
+* ``gather`` — scatter slot assignment + take_along_axis gathers; no one-hot
+  tensors are materialized.  This is the beyond-paper optimized path
+  (see EXPERIMENTS.md §Perf).
+
+Expert weights are [E, d, f]; with E divisible by the "model" mesh axis they
+shard expert-parallel and the dispatch becomes an all-to-all under GSPMD —
+structurally the same collective as the paper's AEP push.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def init_moe(key, cfg):
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    ks = jax.random.split(key, 4)
+    scale_in = d ** -0.5
+    scale_out = f ** -0.5
+    params = {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * scale_in,
+        "w_in": jax.random.normal(ks[1], (e, d, f), jnp.float32) * scale_in,
+        "w_gate": jax.random.normal(ks[2], (e, d, f), jnp.float32) * scale_in,
+        "w_out": jax.random.normal(ks[3], (e, f, d), jnp.float32) * scale_out,
+    }
+    # Dims are claimed left-to-right with divisibility fallback
+    # (sharding.axes_to_pspec): if E divides the "model" axis the experts go
+    # expert-parallel and the mlp dim stays local; if not (e.g. mixtral's 8
+    # experts on a 16-way model axis) "experts" is skipped and the mlp dim
+    # claims "model" instead (tensor-parallel experts).
+    axes = {
+        "router": ("embed", None),
+        "w_in": ("experts", "embed", "mlp"),
+        "w_gate": ("experts", "embed", "mlp"),
+        "w_out": ("experts", "mlp", "embed"),
+    }
+    return params, axes
+
+
+def _route(router, x, top_k):
+    """x: [G,S,d] -> (gates [G,S,k], expert_idx [G,S,k])."""
+    logits = jnp.einsum("gsd,de->gse", x, router.astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    top_vals, top_idx = jax.lax.top_k(logits, top_k)
+    gates = jax.nn.softmax(top_vals, axis=-1)          # mixtral-style renorm
+    return gates.astype(x.dtype), top_idx
+
+
+def _positions_in_expert(expert_idx, num_experts):
+    """Slot order: all tokens' k=0 choices first, then k=1 (GShard priority).
+
+    expert_idx: [G,S,K] -> pos [G,S,K] (occupancy rank within each expert).
+    """
+    G, S, K = expert_idx.shape
+    flat = jnp.swapaxes(expert_idx, 1, 2).reshape(G, K * S)   # [G, K*S] k-major
+    onehot = jax.nn.one_hot(flat, num_experts, dtype=jnp.int32)  # [G,KS,E]
+    pos_flat = jnp.cumsum(onehot, axis=1) - 1                 # [G,KS,E]
+    pos_flat = jnp.take_along_axis(pos_flat, flat[..., None], axis=2)[..., 0]
+    return jnp.swapaxes(pos_flat.reshape(G, K, S), 1, 2)      # [G,S,K]
+
+
+def _expert_ffn(xe, params, act_dtype):
+    """xe: [G,E,C,d] -> [G,E,C,d]."""
+    w_in = params["w_in"].astype(act_dtype)
+    w_gate = params["w_gate"].astype(act_dtype)
+    w_out = params["w_out"].astype(act_dtype)
+    h = jnp.einsum("gecd,edf->gecf", xe, w_in)
+    g = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, w_gate))
+    return jnp.einsum("gecf,efd->gecd", h * g, w_out)
+
+
+def apply_moe(params, x, cfg):
+    """x: [B,T,d] -> [B,T,d]."""
+    B, T, d = x.shape
+    N = B * T
+    S = min(cfg.moe_group_size, N)
+    pad = (-N) % S
+    xf = x.reshape(N, d)
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    G = xf.shape[0] // S
+    xg = xf.reshape(G, S, d)
+
+    E, K = cfg.num_experts, cfg.top_k
+    C = int(np.ceil(S * K / E * cfg.capacity_factor))
+    C = max(4, ((C + 3) // 4) * 4)
+
+    gates, expert_idx = _route(params["router"], xg, K)       # [G,S,K]
+    pos = _positions_in_expert(expert_idx, E)                 # [G,S,K]
+    keep = pos < C
+
+    if cfg.moe_impl == "einsum":
+        out = _dispatch_einsum(params, xg, gates, expert_idx, pos, keep, E, C, cfg)
+    elif cfg.moe_impl == "gather":
+        out = _dispatch_gather(params, xg, gates, expert_idx, pos, keep, E, C, cfg)
+    else:
+        raise ValueError(cfg.moe_impl)
+
+    out = out.reshape(G * S, d)
+    if pad:
+        out = out[:N]
+    return out.reshape(B, T, d)
+
+
+def _dispatch_einsum(params, xg, gates, expert_idx, pos, keep, E, C, cfg):
+    """GShard-style one-hot dispatch/combine (baseline)."""
+    # [G,S,K,E] x [G,S,K,C] -> combine [G,S,E,C]
+    oh_e = jax.nn.one_hot(expert_idx, E, dtype=xg.dtype)
+    oh_c = jax.nn.one_hot(jnp.where(keep, pos, C), C, dtype=xg.dtype)  # ==0 if dropped
+    combine = jnp.einsum("gske,gskc,gsk->gsec", oh_e, oh_c, gates)
+    dispatch = jnp.einsum("gske,gskc->gsec", oh_e, oh_c)
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg)
+    ye = _expert_ffn(xe, params, xg.dtype)
+    return jnp.einsum("gsec,gecd->gsd", combine, ye)
+
+
+def _dispatch_gather(params, xg, gates, expert_idx, pos, keep, E, C, cfg):
+    """Scatter/gather dispatch — no [G,S,E,C] one-hots (optimized)."""
+    G, S, d = xg.shape
+    K = expert_idx.shape[-1]
+    # slot_token[g,e,c] = s of the token occupying that slot (S = empty sentinel)
+    g_ix = jnp.broadcast_to(jnp.arange(G)[:, None, None], (G, S, K))
+    s_ix = jnp.broadcast_to(jnp.arange(S)[None, :, None], (G, S, K))
+    e_ix = expert_idx
+    c_ix = jnp.where(keep, pos, C)       # dropped -> scatter into overflow col
+    slot_token = jnp.full((G, E, C + 1), S, jnp.int32)
+    slot_token = slot_token.at[g_ix, e_ix, c_ix].set(s_ix, mode="drop")
+    slot_token = slot_token[..., :C]                                 # [G,E,C]
+    # gather tokens into expert slots (padded row S reads zeros)
+    xpad = jnp.concatenate([xg, jnp.zeros((G, 1, d), xg.dtype)], axis=1)
+    xe = jax.vmap(lambda xp, st: xp[st])(xpad, slot_token.reshape(G, E * C))
+    ye = _expert_ffn(xe.reshape(G, E, C, d), params, xg.dtype)
+    # gather results back to tokens
+    flat = ye.reshape(G, E * C, d)
+    idx = (expert_idx * C + jnp.minimum(pos, C - 1)).reshape(G, S * K)
+    y_k = jax.vmap(lambda f, i: f[i])(flat, idx)
+    y_k = y_k.reshape(G, S, K, d) * jnp.where(keep, gates, 0.0)[..., None]
+    return y_k.sum(axis=2)
+
+
+def moe_aux_loss(params, x, cfg):
+    """Load-balance auxiliary loss (Switch): E * sum_e f_e * p_e."""
+    B, T, d = x.shape
+    xg = x.reshape(1, B * T, d)
+    logits = jnp.einsum("gsd,de->gse", xg, params["router"].astype(x.dtype),
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, top_idx = jax.lax.top_k(logits, cfg.top_k)
+    frac = jax.nn.one_hot(top_idx, cfg.num_experts).sum(2).mean(axis=(0, 1))
+    return cfg.num_experts * jnp.sum(frac * probs.mean(axis=(0, 1)))

@@ -1,0 +1,104 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Real-Gated Linear Recurrent Unit:
+    r_t = sigmoid(x_t W_a + b_a)          (recurrence gate)
+    i_t = sigmoid(x_t W_x + b_x)          (input gate)
+    log a_t = -c * softplus(Lambda) * r_t (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+The recurrence is diagonal-linear -> parallel over time with
+``jax.lax.associative_scan`` on (a, b) pairs; decode is a single fused step.
+Block layout (one Griffin temporal-mixing block):
+    ln -> [gelu(x W1)] * [RG-LRU(conv1d(x W2))] -> W_out, residual.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer.xlstm import causal_conv1d, rms_norm
+
+_C = 8.0
+
+
+def rglru_scan(x, r, i, lam, h0=None):
+    """x, r, i: [B,T,W]; lam: [W]. Returns (h [B,T,W], h_last [B,W])."""
+    log_a = -_C * jax.nn.softplus(lam.astype(jnp.float32)) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated = (i * x).astype(jnp.float32)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * gated
+    if h0 is not None:
+        # absorb carried state into the first step: h_1 = a_1 h0 + b_1
+        b = b.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+    def combine(l, rgt):
+        a1, b1 = l
+        a2, b2 = rgt
+        return a1 * a2, a2 * b1 + b2
+    As, Bs = jax.lax.associative_scan(combine, (a, b), axis=1)
+    del As
+    return Bs.astype(x.dtype), Bs[:, -1, :]
+
+
+def rglru_step(x, r, i, lam, h_prev):
+    """Single decode step: x, r, i: [B,1,W]; h_prev [B,W]."""
+    log_a = -_C * jax.nn.softplus(lam.astype(jnp.float32)) * r[:, 0].astype(jnp.float32)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * \
+        (i[:, 0] * x[:, 0]).astype(jnp.float32)
+    h = a * h_prev.astype(jnp.float32) + b
+    return h[:, None, :].astype(x.dtype), h
+
+
+def init_rglru_block(key, cfg):
+    d, w = cfg.d_model, cfg.rnn_width
+    ks = jax.random.split(key, 6)
+    s = d ** -0.5
+    params = {
+        "ln": jnp.ones((d,), jnp.float32),
+        "w1": jax.random.normal(ks[0], (d, w), jnp.float32) * s,
+        "w2": jax.random.normal(ks[1], (d, w), jnp.float32) * s,
+        "conv_w": jax.random.normal(ks[2], (cfg.conv1d_width, w), jnp.float32) * 0.3,
+        "w_a": jax.random.normal(ks[3], (w, w), jnp.float32) * w ** -0.5,
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_x": jax.random.normal(ks[4], (w, w), jnp.float32) * w ** -0.5,
+        "b_x": jnp.zeros((w,), jnp.float32),
+        # Lambda init so that a^c in [0.9, 0.999] (griffin init)
+        "lam": jnp.log(jnp.expm1(-jnp.log(
+            jnp.linspace(0.9, 0.999, w).astype(jnp.float32)) / _C)),
+        "w_out": jax.random.normal(ks[5], (w, d), jnp.float32) * w ** -0.5,
+    }
+    axes = {
+        "ln": (None,),
+        "w1": ("embed", "rnn"), "w2": ("embed", "rnn"),
+        "conv_w": (None, "rnn"),
+        "w_a": ("rnn", None), "b_a": ("rnn",),
+        "w_x": ("rnn", None), "b_x": ("rnn",),
+        "lam": ("rnn",),
+        "w_out": ("rnn", "embed"),
+    }
+    return params, axes
+
+
+def apply_rglru_block(params, x, cfg, state=None, mode="train"):
+    """x: [B,T,d] -> (y, state). state = (h [B,W], conv_buf [B,cw-1,W])."""
+    dt = x.dtype
+    xn = rms_norm(x, params["ln"], cfg.norm_eps)
+    y1 = jax.nn.gelu(xn @ params["w1"].astype(dt))
+    y2 = xn @ params["w2"].astype(dt)
+    h_prev, conv_buf = state if state is not None else (None, None)
+    y2, conv_buf = causal_conv1d(y2, params["conv_w"], conv_buf)
+    r = jax.nn.sigmoid(y2 @ params["w_a"].astype(dt) + params["b_a"].astype(dt))
+    i = jax.nn.sigmoid(y2 @ params["w_x"].astype(dt) + params["b_x"].astype(dt))
+    if mode == "decode":
+        if h_prev is None:
+            h_prev = jnp.zeros((x.shape[0], cfg.rnn_width), jnp.float32)
+        h, h_last = rglru_step(y2, r, i, params["lam"], h_prev)
+    else:
+        h, h_last = rglru_scan(y2, r, i, params["lam"], h_prev)
+    out = (h * y1) @ params["w_out"].astype(dt)
+    return x + out, (h_last, conv_buf)
+
+
+def init_rglru_cache(cfg, batch, dtype):
+    return (jnp.zeros((batch, cfg.rnn_width), jnp.float32),
+            jnp.zeros((batch, cfg.conv1d_width - 1, cfg.rnn_width), dtype))

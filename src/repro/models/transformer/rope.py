@@ -1,0 +1,38 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL M-RoPE.
+
+M-RoPE [arXiv:2409.12191]: the head_dim/2 rotary frequency pairs are split
+into (temporal, height, width) sections; section j rotates by positions[:, j].
+For pure text, all three position streams are equal and M-RoPE reduces to
+standard RoPE exactly.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax.numpy as jnp
+
+
+def rope_angles(positions: jnp.ndarray, head_dim: int, theta: float,
+                mrope_sections: Optional[Sequence[int]] = None) -> jnp.ndarray:
+    """positions: [B, T] (standard) or [B, 3, T] (M-RoPE) -> angles [B, T, hd/2]."""
+    half = head_dim // 2
+    inv_freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    if mrope_sections is None:
+        assert positions.ndim == 2, positions.shape
+        return positions[:, :, None].astype(jnp.float32) * inv_freq[None, None, :]
+    assert positions.ndim == 3 and positions.shape[1] == 3, positions.shape
+    assert sum(mrope_sections) == half, (mrope_sections, half)
+    section_id = jnp.repeat(
+        jnp.arange(3), jnp.asarray(mrope_sections), total_repeat_length=half)
+    # pick position stream per frequency pair: [B, half, T]
+    pos = positions.astype(jnp.float32)[:, section_id, :]
+    return jnp.swapaxes(pos, 1, 2) * inv_freq[None, None, :]  # [B, T, half]
+
+
+def apply_rope(x: jnp.ndarray, angles: jnp.ndarray) -> jnp.ndarray:
+    """x: [B, T, H, hd]; angles: [B, T, hd/2]. Rotates (first-half, second-half) pairs."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = jnp.cos(angles)[:, :, None, :].astype(x.dtype)
+    sin = jnp.sin(angles)[:, :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)

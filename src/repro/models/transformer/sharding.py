@@ -1,0 +1,107 @@
+"""Logical-axis sharding rules (MaxText-style, simplified).
+
+Every param/cache/activation tensor carries a tuple of *logical* axis names
+(one per dim, or None).  ``rules`` maps logical names to mesh axes.  A
+logical axis whose size does not divide the product of its mesh axes is
+silently left unsharded (e.g. kv_heads=8 on a model=16 mesh replicates;
+q-heads still shard) — this is what makes one rule set serve all ten
+architectures and all mesh shapes.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis -> mesh axes (tuple) — the single-pod/multi-pod default rules.
+DEFAULT_RULES: dict[str, tuple[str, ...]] = {
+    "batch": ("pod", "data"),
+    "seq": (),                    # sequence stays unsharded by default
+    "long_seq": ("pod", "data"),  # cache seq for batch-1 long-context decode
+    "embed": ("data",),           # FSDP-style param shard of the d_model dim
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "seq_model": ("model",),      # context-parallel fallback (attention)
+    "head_dim": (),
+    "vocab": ("model",),
+    "experts": ("model",),
+    "expert_mlp": (),             # fallback axis when experts don't divide
+    "rnn": ("model",),
+    "layers": (),
+    "stack": (),
+}
+
+
+def axes_to_pspec(axes: Optional[Sequence[Optional[str]]],
+                  shape: Sequence[int],
+                  mesh: Mesh,
+                  rules: Optional[dict] = None) -> P:
+    """Build a PartitionSpec from logical axes with divisibility fallback."""
+    rules = rules or DEFAULT_RULES
+    if axes is None:
+        return P()
+    assert len(axes) == len(shape), (axes, shape)
+    used: set[str] = set()
+    spec = []
+    for dim, name in zip(shape, axes):
+        if name is None:
+            spec.append(None)
+            continue
+        mesh_axes = tuple(a for a in rules.get(name, ())
+                          if a in mesh.axis_names and a not in used)
+        size = int(np.prod([mesh.shape[a] for a in mesh_axes])) if mesh_axes else 1
+        if mesh_axes and dim % size == 0:
+            spec.append(mesh_axes if len(mesh_axes) > 1 else mesh_axes[0])
+            used.update(mesh_axes)
+        else:
+            # try progressively shorter prefixes (e.g. batch=32 on pod*data=32 ok,
+            # batch=1 -> unsharded; heads=24 on model=16 -> unsharded)
+            placed = False
+            for cut in range(len(mesh_axes) - 1, 0, -1):
+                sub = mesh_axes[:cut]
+                sz = int(np.prod([mesh.shape[a] for a in sub]))
+                if dim % sz == 0:
+                    spec.append(sub if len(sub) > 1 else sub[0])
+                    used.update(sub)
+                    placed = True
+                    break
+            if not placed:
+                spec.append(None)
+    return P(*spec)
+
+
+def tree_shardings(axes_tree, shape_tree, mesh: Mesh, rules=None):
+    """Map (axes pytree, shape pytree) -> NamedSharding pytree."""
+    def one(axes, shaped):
+        shape = shaped.shape if hasattr(shaped, "shape") else tuple(shaped)
+        return NamedSharding(mesh, axes_to_pspec(axes, shape, mesh, rules))
+    return jax.tree_util.tree_map(
+        one, axes_tree, shape_tree,
+        is_leaf=lambda x: x is None or (isinstance(x, tuple) and
+                                        all(isinstance(e, (str, type(None))) for e in x)))
+
+
+def constrain(x, axes: Sequence[Optional[str]], mesh: Optional[Mesh] = None,
+              rules=None):
+    """with_sharding_constraint by logical axes (no-op outside jit/mesh)."""
+    mesh = mesh or _current_mesh()
+    if mesh is None or mesh.empty:
+        return x
+    spec = axes_to_pspec(axes, x.shape, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _current_mesh() -> Optional[Mesh]:
+    try:
+        m = jax.sharding.get_abstract_mesh()
+        if m is not None and not m.empty:
+            # need a concrete mesh for NamedSharding; fall back to thread-local
+            pass
+    except Exception:
+        pass
+    from jax._src import mesh as mesh_lib
+    m = mesh_lib.thread_resources.env.physical_mesh
+    return None if m.empty else m

@@ -1,0 +1,352 @@
+"""xLSTM blocks [arXiv:2405.04517]: mLSTM (matrix memory) and sLSTM (scalar).
+
+True mLSTM semantics (per head, q/k/v in R^dh):
+    C*_t = sum_{s<=t} exp(g_t - g_s + logi_s) k_s v_s^T,   g_t = cumsum(logf)
+    n*_t analogous with k_s;   h_t = (q_t @ C*_t) / max(|n*_t . q_t|, 1)
+with logf = log_sigmoid(f_raw), logi = i_raw.  Both implementations below
+compute exactly this (stabilizer conventions cancel in the final ratio):
+
+* ``mlstm_sequential`` — lax.scan over time (exact oracle; also the decode step)
+* ``mlstm_chunkwise``  — chunked-parallel: intra-chunk attention-like matmuls
+  + inter-chunk recurrence on (C, n, m); O(T*L) instead of O(T) scan steps.
+
+sLSTM is inherently sequential (recurrent gate connections) -> lax.scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer.sharding import constrain
+
+# mLSTM sharding: with few heads (xlstm-1.3b has 4) the head dim cannot
+# claim a 16-way "model" axis — but dh (1024) can.  We shard the VALUE dh
+# dim of v / C / h over "model" ("rnn" rule); q/k contractions stay local
+# and GSPMD reduce-scatters the w_v projection straight into the sharded
+# layout (EXPERIMENTS.md §Perf iter 3).
+_V_AXES = ("batch", None, None, "rnn")      # [B, T, H, dh_v]
+_C_AXES = ("batch", None, None, "rnn")      # [B, H, dh_k, dh_v]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell math
+# ---------------------------------------------------------------------------
+def mlstm_sequential(q, k, v, i_raw, f_raw, state=None):
+    """q,k,v: [B,T,H,dh]; i_raw,f_raw: [B,T,H]. Returns (h [B,T,H,dh], state).
+
+    state = (C [B,H,dh,dh], n [B,H,dh], m [B,H]) in "stabilized" units.
+    """
+    B, T, H, dh = q.shape
+    if state is None:
+        state = init_mlstm_state(B, H, dh, q.dtype)
+    C0, n0, m0 = state
+    q = q * dh ** -0.5
+    logf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+    logi = i_raw.astype(jnp.float32)
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, lit, lft = xs       # [B,H,dh], [B,H]
+        m_new = jnp.maximum(lft + m, lit)
+        fw = jnp.exp(lft + m - m_new)[..., None]          # [B,H,1]
+        iw = jnp.exp(lit - m_new)[..., None]
+        C = fw[..., None] * C + (iw * kt)[..., :, None] * vt[..., None, :]
+        n = fw * n + iw * kt
+        num = jnp.einsum("bhd,bhde->bhe", qt, C)
+        den = jnp.abs(jnp.einsum("bhd,bhd->bh", qt, n))
+        den = jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), (num / den)
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in
+               (q.astype(jnp.float32), k.astype(jnp.float32),
+                v.astype(jnp.float32), logi, logf))
+    (C, n, m), hs = jax.lax.scan(step, (C0, n0, m0), xs)
+    return jnp.moveaxis(hs, 0, 1).astype(q.dtype), (C, n, m)
+
+
+def mlstm_chunkwise(q, k, v, i_raw, f_raw, state=None, chunk: int = 256):
+    """Chunked-parallel mLSTM; numerically matches mlstm_sequential."""
+    B, T, H, dh = q.shape
+    if state is None:
+        state = init_mlstm_state(B, H, dh, q.dtype)
+    if T % chunk:
+        pad = (-T) % chunk
+        zpad = lambda a: jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        h, st = mlstm_chunkwise(zpad(q), zpad(k), zpad(v),
+                                jnp.pad(i_raw, ((0, 0), (0, pad), (0, 0)),
+                                        constant_values=-1e30),   # i=0
+                                jnp.pad(f_raw, ((0, 0), (0, pad), (0, 0)),
+                                        constant_values=30.0),    # f=1
+                                state, chunk)
+        return h[:, :T], st
+    L = chunk
+    N = T // L
+    out_dtype = q.dtype
+    q = (q * dh ** -0.5).astype(jnp.float32)
+    k, v = k.astype(jnp.float32), v.astype(jnp.float32)
+    logf = jax.nn.log_sigmoid(f_raw.astype(jnp.float32))
+    logi = i_raw.astype(jnp.float32)
+
+    def to_chunks(a):  # [B,T,...] -> [N,B,L,...]
+        return jnp.moveaxis(a.reshape(B, N, L, *a.shape[2:]), 1, 0)
+
+    qs, ks, vs, lis, lfs = map(to_chunks, (q, k, v, logi, logf))
+
+    # Opt-IN: sharding C/v over dh looked like a win under the pre-fix
+    # (slice-aliasing-inflated) analyzer, but with corrected accounting it
+    # trades memory for collectives at a small net loss — see EXPERIMENTS.md
+    # §Perf iter 3 (refuted hypothesis, kept available for real-TPU checks).
+    import os as _os
+    shard_v = "mlstm_shard" in _os.environ.get(
+        "REPRO_ENABLE_OPT", "").split(",")
+
+    def on_chunk(carry, xs):
+        C, n, m0 = carry                       # [B,H,dh,dh], [B,H,dh], [B,H]
+        qc, kc, vc, lic, lfc = xs              # [B,L,H,dh] / [B,L,H]
+        if shard_v:
+            vc = constrain(vc, _V_AXES)
+            C = constrain(C, _C_AXES)
+        b = jnp.cumsum(lfc, axis=1)            # [B,L,H] local log-decay cumsum
+        a_hat = lic - b                        # [B,L,H]
+        A_t = jax.lax.cummax(a_hat, axis=1)
+        M_t = jnp.maximum(m0[:, None], A_t)    # [B,L,H]
+        # intra-chunk: D[t,s] = exp(a_hat_s - M_t) for s<=t
+        D = jnp.exp(a_hat[:, None, :, :] - M_t[:, :, None, :])   # [B,t,s,H]
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        D = jnp.where(tri[None, :, :, None], D, 0.0)
+        scores = jnp.einsum("bthd,bshd->btsh", qc, kc) * D
+        num = jnp.einsum("btsh,bshd->bthd", scores, vc)
+        den = scores.sum(axis=2)                                  # [B,t,H]
+        # inter-chunk contribution from carry
+        w0 = jnp.exp(m0[:, None] - M_t)                           # [B,L,H]
+        num = num + w0[..., None] * jnp.einsum("bthd,bhde->bthe", qc, C)
+        den = den + w0 * jnp.einsum("bthd,bhd->bth", qc, n)
+        m_t = b + M_t
+        denom = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        h = num / denom
+        # carry update (in end-of-chunk units)
+        bL = b[:, -1]                                             # [B,H]
+        M_L = M_t[:, -1]
+        wC = jnp.exp(m0 - M_L)                                    # [B,H]
+        wk = jnp.exp(a_hat - M_L[:, None])                        # [B,L,H]
+        C_new = wC[..., None, None] * C + jnp.einsum(
+            "blhd,blhe->bhde", kc * wk[..., None], vc)
+        n_new = wC[..., None] * n + (kc * wk[..., None]).sum(axis=1)
+        m_new = bL + M_L
+        if shard_v:
+            C_new = constrain(C_new, _C_AXES)
+            h = constrain(h, _V_AXES)
+        return (C_new, n_new, m_new), h
+
+    (C, n, m), hs = jax.lax.scan(on_chunk, state, (qs, ks, vs, lis, lfs))
+    h = jnp.moveaxis(hs, 0, 1).reshape(B, T, H, dh)
+    return h.astype(out_dtype), (C, n, m)
+
+
+def mlstm_step(q, k, v, i_raw, f_raw, state):
+    """Single decode step. q,k,v: [B,1,H,dh]."""
+    h, state = mlstm_sequential(q, k, v, i_raw, f_raw, state)
+    return h, state
+
+
+def init_mlstm_state(B, H, dh, dtype=jnp.float32):
+    return (jnp.zeros((B, H, dh, dh), jnp.float32),
+            jnp.zeros((B, H, dh), jnp.float32),
+            jnp.full((B, H), -1e30, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# causal depthwise conv1d (used by mLSTM and RG-LRU)
+# ---------------------------------------------------------------------------
+def causal_conv1d(x, w, buf: Optional[jnp.ndarray] = None):
+    """x: [B,T,D]; w: [W,D] depthwise. buf: [B,W-1,D] carried context.
+
+    Returns (y [B,T,D], new_buf [B,W-1,D]).
+    """
+    W = w.shape[0]
+    ctx = buf if buf is not None else jnp.zeros(
+        (x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xc = jnp.concatenate([ctx.astype(x.dtype), x], axis=1)      # [B,T+W-1,D]
+    y = sum(xc[:, i:i + x.shape[1], :] * w[i][None, None, :].astype(x.dtype)
+            for i in range(W))
+    return y, xc[:, -(W - 1):, :]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (pre-norm residual, own up/down projections; proj_factor 2)
+# ---------------------------------------------------------------------------
+def init_mlstm_block(key, cfg):
+    d = cfg.d_model
+    inner = int(cfg.mlstm_proj_factor * d)
+    H = cfg.num_heads
+    dh = inner // H
+    ks = jax.random.split(key, 9)
+    s_d, s_i = d ** -0.5, inner ** -0.5
+    params = {
+        "ln": jnp.ones((d,), jnp.float32),
+        "w_up": jax.random.normal(ks[0], (d, inner), jnp.float32) * s_d,
+        "w_z": jax.random.normal(ks[1], (d, inner), jnp.float32) * s_d,
+        "conv_w": jax.random.normal(ks[2], (cfg.conv1d_width, inner), jnp.float32) * 0.3,
+        "w_q": jax.random.normal(ks[3], (inner, H, dh), jnp.float32) * s_i,
+        "w_k": jax.random.normal(ks[4], (inner, H, dh), jnp.float32) * s_i,
+        "w_v": jax.random.normal(ks[5], (inner, H, dh), jnp.float32) * s_i,
+        "w_i": jax.random.normal(ks[6], (inner, H), jnp.float32) * s_i,
+        "w_f": jax.random.normal(ks[7], (inner, H), jnp.float32) * s_i,
+        "b_f": jnp.full((H,), 3.0, jnp.float32),   # init forget gate ~ open
+        "gn": jnp.ones((inner,), jnp.float32),
+        "w_down": jax.random.normal(ks[8], (inner, d), jnp.float32) * s_i,
+    }
+    axes = {
+        "ln": (None,),
+        "w_up": ("embed", "rnn"), "w_z": ("embed", "rnn"),
+        "conv_w": (None, "rnn"),
+        "w_q": ("rnn", "heads", None), "w_k": ("rnn", "heads", None),
+        "w_v": ("rnn", "heads", None),
+        "w_i": ("rnn", "heads"), "w_f": ("rnn", "heads"), "b_f": ("heads",),
+        "gn": ("rnn",),
+        "w_down": ("rnn", "embed"),
+    }
+    return params, axes
+
+
+def apply_mlstm_block(params, x, cfg, state=None, mode="train"):
+    """x: [B,T,d] -> (y, new_state). state=(cell_state, conv_buf)."""
+    dt = x.dtype
+    B, T, d = x.shape
+    inner = int(cfg.mlstm_proj_factor * d)
+    H = cfg.num_heads
+    dh = inner // H
+    xn = rms_norm(x, params["ln"], cfg.norm_eps)
+    up = xn @ params["w_up"].astype(dt)
+    z = xn @ params["w_z"].astype(dt)
+    cell_state, conv_buf = state if state is not None else (None, None)
+    c, conv_buf = causal_conv1d(up, params["conv_w"], conv_buf)
+    c = jax.nn.silu(c)
+    q = jnp.einsum("bti,ihd->bthd", c, params["w_q"].astype(dt))
+    k = jnp.einsum("bti,ihd->bthd", c, params["w_k"].astype(dt))
+    v = jnp.einsum("bti,ihd->bthd", up, params["w_v"].astype(dt))
+    i_raw = jnp.einsum("bti,ih->bth", up, params["w_i"].astype(dt))
+    f_raw = jnp.einsum("bti,ih->bth", up, params["w_f"].astype(dt)) + \
+        params["b_f"].astype(dt)[None, None]
+    if mode == "decode":
+        h, cell_state = mlstm_step(q, k, v, i_raw, f_raw, cell_state)
+    elif getattr(cfg, "mlstm_impl", "chunkwise") == "recurrent":
+        h, cell_state = mlstm_sequential(q, k, v, i_raw, f_raw, cell_state)
+    else:
+        h, cell_state = mlstm_chunkwise(q, k, v, i_raw, f_raw, cell_state,
+                                        chunk=min(256, max(T, 1)))
+    h = h.reshape(B, T, inner)
+    h = group_norm(h, params["gn"], H, cfg.norm_eps)
+    out = (h.astype(dt) * jax.nn.silu(z)) @ params["w_down"].astype(dt)
+    return x + out, (cell_state, conv_buf)
+
+
+def init_mlstm_cache(cfg, batch, dtype):
+    inner = int(cfg.mlstm_proj_factor * cfg.d_model)
+    H = cfg.num_heads
+    dh = inner // H
+    return (init_mlstm_state(batch, H, dh),
+            jnp.zeros((batch, cfg.conv1d_width - 1, inner), dtype))
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (sequential scan; scalar memory with recurrent gate connections)
+# ---------------------------------------------------------------------------
+def init_slstm_block(key, cfg):
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    ks = jax.random.split(key, 4)
+    s = d ** -0.5
+    # input weights for 4 gates; recurrent weights block-diagonal per head
+    params = {
+        "ln": jnp.ones((d,), jnp.float32),
+        "w_gates": jax.random.normal(ks[0], (d, 4 * d), jnp.float32) * s,
+        "r_gates": jax.random.normal(ks[1], (H, dh, 4 * dh), jnp.float32) * dh ** -0.5,
+        "b_gates": jnp.concatenate([jnp.zeros((2 * d,)), jnp.full((d,), 3.0),
+                                    jnp.zeros((d,))]).astype(jnp.float32),
+        "gn": jnp.ones((d,), jnp.float32),
+        "w_up": jax.random.normal(ks[2], (d, 2 * d), jnp.float32) * s,
+        "w_down": jax.random.normal(ks[3], (d, d), jnp.float32) * s,
+    }
+    axes = {
+        "ln": (None,),
+        "w_gates": ("embed", "rnn"),
+        "r_gates": ("heads", None, None),
+        "b_gates": ("rnn",),
+        "gn": (None,),
+        "w_up": ("embed", "rnn"),
+        "w_down": ("rnn", "embed"),
+    }
+    return params, axes
+
+
+def apply_slstm_block(params, x, cfg, state=None, mode="train"):
+    """x: [B,T,d]. state = (c, n, h, m): c,n,h [B,d]; m [B,H]."""
+    dt = x.dtype
+    B, T, d = x.shape
+    H = cfg.num_heads
+    dh = d // H
+    xn = rms_norm(x, params["ln"], cfg.norm_eps)
+    gx = xn @ params["w_gates"].astype(dt) + params["b_gates"].astype(dt)  # [B,T,4d]
+    if state is None:
+        state = init_slstm_state(B, d, H)
+    c0, n0, h0, m0 = state
+    r = params["r_gates"].astype(jnp.float32)
+
+    def step(carry, gxt):
+        c, n, h, m = carry                       # f32 [B,d], m [B,H]
+        hh = h.reshape(B, H, dh)
+        gr = jnp.einsum("bhd,hde->bhe", hh, r).reshape(B, 4 * d)
+        g = gxt.astype(jnp.float32) + gr
+        zi, ii, fi, oi = jnp.split(g, 4, axis=-1)
+        z = jnp.tanh(zi)
+        o = jax.nn.sigmoid(oi)
+        logi = ii.reshape(B, H, dh).mean(-1)     # per-head scalar gates
+        logf = jax.nn.log_sigmoid(fi).reshape(B, H, dh).mean(-1)
+        m_new = jnp.maximum(logf + m, logi)
+        iw = jnp.exp(logi - m_new)[..., None].repeat(dh, -1).reshape(B, d)
+        fw = jnp.exp(logf + m - m_new)[..., None].repeat(dh, -1).reshape(B, d)
+        c = fw * c + iw * z
+        n = fw * n + iw
+        h = o * c / jnp.maximum(n, 1e-6)
+        return (c, n, h, m_new), h
+
+    gxs = jnp.moveaxis(gx, 1, 0)
+    (c, n, h, m), hs = jax.lax.scan(step, (c0, n0, h0, m0), gxs)
+    hseq = jnp.moveaxis(hs, 0, 1).astype(dt)                     # [B,T,d]
+    hseq = group_norm(hseq, params["gn"], H, cfg.norm_eps)
+    u, g = jnp.split(hseq @ params["w_up"].astype(dt), 2, axis=-1)
+    out = (u * jax.nn.silu(g)) @ params["w_down"].astype(dt)
+    return x + out, (c, n, h, m)
+
+
+def init_slstm_state(B, d, H):
+    return (jnp.zeros((B, d), jnp.float32), jnp.zeros((B, d), jnp.float32),
+            jnp.zeros((B, d), jnp.float32), jnp.full((B, H), -1e30, jnp.float32))
+
+
+def init_slstm_cache(cfg, batch, dtype):
+    return init_slstm_state(batch, cfg.d_model, cfg.num_heads)
+
+
+# ---------------------------------------------------------------------------
+# norms (shared)
+# ---------------------------------------------------------------------------
+def rms_norm(x, scale, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+            ).astype(x.dtype) * scale.astype(x.dtype)
+
+
+def group_norm(x, scale, groups, eps):
+    """Per-head group norm over the channel dim. x: [B,T,D]."""
+    B, T, D = x.shape
+    xg = x.reshape(B, T, groups, D // groups).astype(jnp.float32)
+    mu = xg.mean(-1, keepdims=True)
+    var = xg.var(-1, keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + eps)
+    return xg.reshape(B, T, D).astype(x.dtype) * scale.astype(x.dtype)

@@ -1,0 +1,1 @@
+from repro.serve.scheduler import BatchScheduler, Request

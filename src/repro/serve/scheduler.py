@@ -1,0 +1,150 @@
+"""Batched serving scheduler (continuous-batching-lite).
+
+Serves any of the assigned architectures with a FIXED device batch of
+decode slots (the compiled serve_step shape never changes — TPU-friendly):
+
+  * requests queue up with a prompt; free slots are claimed per step,
+  * each step decodes ONE token for every active slot (one compiled call),
+  * prompts are injected via teacher-forced decode steps on the slot's
+    cache region (per-slot positions; the position-driven attention mask
+    keeps slots independent),
+  * finished requests (eos or max_tokens) free their slot immediately.
+
+Because every slot carries its own position counter and the KV cache mask
+is position-driven (kv_pos = -1 for empty), slot reuse needs no cache
+zeroing beyond resetting the position column — mirroring production
+slot-based servers (vLLM-style, minus paging).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import model as M
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list
+    max_tokens: int
+    eos_id: Optional[int] = None
+    generated: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class BatchScheduler:
+    def __init__(self, cfg, params, num_slots: int, cache_len: int,
+                 extra: Optional[dict] = None):
+        self.cfg = cfg
+        self.params = params
+        self.num_slots = num_slots
+        self.cache_len = cache_len
+        self.caches = M.init_cache(cfg, num_slots, cache_len)
+        self.slot_req: list[Optional[Request]] = [None] * num_slots
+        self.slot_pos = np.zeros(num_slots, np.int64)
+        self.slot_tok = np.zeros((num_slots, 1), np.int32)
+        self.slot_prompt_left: list[deque] = [deque() for _ in range(num_slots)]
+        self.queue: deque[Request] = deque()
+        self._step = jax.jit(self._make_step())
+        self.steps_run = 0
+
+    def _make_step(self):
+        cfg = self.cfg
+        # every cache leaf is [num_units, slots, ...] -> slot axis is 1
+        cache_axes = jax.tree_util.tree_map(lambda _: 1, self.caches)
+
+        def stepf(params, caches, tokens, positions):
+            # vmap the single-sequence decode over the slot dim so each
+            # slot advances at its OWN position (continuous batching).
+            def one(cache, tok, pos):
+                # vmap strips the slot axis; decode expects a batch dim
+                cache = jax.tree_util.tree_map(
+                    lambda a: jnp.expand_dims(a, 1), cache)
+                logits, cache = M.decode_step(params, cfg, cache,
+                                              tok[None], pos)
+                cache = jax.tree_util.tree_map(
+                    lambda a: jnp.squeeze(a, 1), cache)
+                return logits[0], cache
+            logits, caches = jax.vmap(one, in_axes=(cache_axes, 0, 0),
+                                      out_axes=(0, cache_axes))(
+                caches, tokens, positions)
+            nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+            return nxt, caches
+
+        return stepf
+
+    # -- public API --------------------------------------------------------
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for s in range(self.num_slots):
+            if self.slot_req[s] is None and self.queue:
+                req = self.queue.popleft()
+                self.slot_req[s] = req
+                self.slot_pos[s] = 0
+                self.slot_prompt_left[s] = deque(req.prompt)
+                self.slot_tok[s, 0] = self.slot_prompt_left[s].popleft()
+                self._reset_slot_cache(s)
+
+    def _reset_slot_cache(self, s: int):
+        """Write a freshly-initialized slot (positions -1, zero states) —
+        slot reuse never sees a previous request's cache/recurrent state."""
+        fresh = M.init_cache(self.cfg, 1, self.cache_len)
+        self.caches = jax.tree_util.tree_map(
+            lambda a, f: a.at[:, s].set(f[:, 0].astype(a.dtype)),
+            self.caches, fresh)
+
+    def step(self):
+        """One decode step across all active slots."""
+        self._admit()
+        active = [s for s in range(self.num_slots) if self.slot_req[s]]
+        if not active:
+            return False
+        tokens = jnp.asarray(self.slot_tok)
+        positions = jnp.asarray(self.slot_pos.astype(np.int32))
+        nxt, self.caches = self._step(self.params, self.caches, tokens,
+                                      positions)
+        nxt = np.asarray(nxt)
+        self.steps_run += 1
+        for s in active:
+            req = self.slot_req[s]
+            self.slot_pos[s] += 1
+            if self.slot_prompt_left[s]:
+                # still teacher-forcing the prompt
+                self.slot_tok[s, 0] = self.slot_prompt_left[s].popleft()
+                continue
+            tok = int(nxt[s])
+            req.generated.append(tok)
+            self.slot_tok[s, 0] = tok
+            if (req.eos_id is not None and tok == req.eos_id) or \
+                    len(req.generated) >= req.max_tokens or \
+                    self.slot_pos[s] >= self.cache_len - 1:
+                req.done = True
+                self.slot_req[s] = None
+        return True
+
+    def run(self, max_steps: int = 10_000) -> int:
+        """Drive until queue + slots drain. Returns decode steps executed."""
+        while (self.queue or any(self.slot_req)) and max_steps > 0:
+            if not self.step():
+                break
+            max_steps -= 1
+        return self.steps_run
+
+
+def serve_requests(cfg, params, requests, num_slots=4, cache_len=64):
+    """Convenience driver: schedule `requests`, run to completion."""
+    sched = BatchScheduler(cfg, params, num_slots, cache_len)
+    for r in requests:
+        sched.submit(r)
+    while sched.queue or any(sched.slot_req):
+        if not sched.step():
+            break
+    return requests, sched.steps_run

@@ -1,0 +1,34 @@
+"""Flat-npz checkpointing for arbitrary pytrees (params, opt state, HECs)."""
+from __future__ import annotations
+
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten(tree)
+    return flat, treedef
+
+
+def save(path: str, tree, step: int = 0):
+    flat, treedef = _flatten(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(flat)}
+    arrays["__step__"] = np.asarray(step)
+    np.savez(path, **arrays)
+
+
+def restore(path: str, like_tree):
+    """Restore into the structure of ``like_tree`` (shape-checked)."""
+    flat, treedef = _flatten(like_tree)
+    with np.load(path) as data:
+        loaded = []
+        for i, ref in enumerate(flat):
+            arr = data[f"leaf_{i}"]
+            assert arr.shape == tuple(ref.shape), \
+                f"leaf {i}: ckpt {arr.shape} != model {ref.shape}"
+            loaded.append(jax.numpy.asarray(arr, dtype=ref.dtype))
+        step = int(data["__step__"])
+    return jax.tree_util.tree_unflatten(treedef, loaded), step

@@ -1,0 +1,438 @@
+"""Distributed minibatch GNN training (paper Algorithms 1 & 2).
+
+One shard_map shard on mesh axis "data" == one paper "rank".  Per rank:
+graph partition, per-layer HECs, db_halo — stacked [R, ...] arrays sharded
+on the leading axis.  Model params are replicated; gradients are psum'ed
+(the paper's blocking All-Reduce).
+
+Asynchronous Embedding Push (AEP): the all_to_all push computed at step k
+is carried in a delay-``d`` in-flight buffer and HECStore'd at step k+d —
+the exact bounded-staleness semantics of the paper's MPI AlltoallAsync +
+comm_wait, expressed functionally (XLA/TPU overlaps the in-step collective
+with compute; the *semantic* delay is reproduced bit-exactly).
+
+Modes:
+  aep  — paper: HEC + delayed push (DistGNN-MB)
+  sync — DistDGL-like baseline: fresh layer-0 halo features fetched with a
+         blocking request/response all_to_all pair every iteration
+  drop — LLCG-like: cut edges ignored (halos invalid everywhere)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.gnn import GNNConfig
+from repro.core import hec as hec_lib
+from repro.graph.partition import PartitionSet
+from repro.graph.sampling import epoch_minibatches, sample_blocks
+from repro.models.gnn import gat as gat_lib
+from repro.models.gnn import graphsage as sage_lib
+from repro.train import optimizer as opt_lib
+
+_SENTINEL = np.int32(2 ** 30)    # sorts after every real VID_o
+
+
+# ---------------------------------------------------------------------------
+# host-side data preparation
+# ---------------------------------------------------------------------------
+def _pad_stack(arrays, pad_value=0, dtype=None):
+    n = max(len(a) for a in arrays)
+    rest = arrays[0].shape[1:]
+    out = np.full((len(arrays), n) + rest, pad_value,
+                  dtype or arrays[0].dtype)
+    for i, a in enumerate(arrays):
+        out[i, :len(a)] = a
+    return out
+
+
+def build_dist_data(ps: PartitionSet, cfg: GNNConfig) -> dict:
+    R = ps.num_parts
+    feats = _pad_stack([p.features for p in ps.parts], 0.0)
+    labels = _pad_stack([p.labels.astype(np.int32) for p in ps.parts], 0)
+    num_solid = np.array([p.num_solid for p in ps.parts], np.int32)
+    vid_o = _pad_stack([p.vid_p_to_o().astype(np.int32) for p in ps.parts], -1)
+    # db_halo rows stay sorted: pad with a large sentinel
+    dbs = [[ps.db_halo(i, j) for j in range(R)] for i in range(R)]
+    D = max(1, max(len(d) for row in dbs for d in row))
+    db_halo = np.full((R, R, D), _SENTINEL, np.int32)
+    for i in range(R):
+        for j in range(R):
+            db_halo[i, j, :len(dbs[i][j])] = dbs[i][j]
+    return {
+        "features": jnp.asarray(feats),
+        "labels": jnp.asarray(labels),
+        "num_solid": jnp.asarray(num_solid),
+        "vid_o": jnp.asarray(vid_o),
+        "db_halo": jnp.asarray(db_halo),
+    }
+
+
+def sample_step(ps: PartitionSet, cfg: GNNConfig, seed_lists, rng) -> dict:
+    """Sample one synchronized minibatch per rank -> stacked device arrays."""
+    R = ps.num_parts
+    mbs = [sample_blocks(ps.parts[r], seed_lists[r], cfg.fanouts, rng,
+                         cfg.batch_size) for r in range(R)]
+    L = mbs[0].num_layers
+    return {
+        "seeds": jnp.asarray(np.stack([m.seeds for m in mbs]).astype(np.int32)),
+        "seed_mask": jnp.asarray(np.stack([m.seed_mask for m in mbs])),
+        "labels": jnp.asarray(np.stack([m.labels for m in mbs]).astype(np.int32)),
+        "nbr_idx": [jnp.asarray(np.stack([m.nbr_idx[k] for m in mbs])
+                                .astype(np.int32)) for k in range(L)],
+        "layer_nodes": [jnp.asarray(np.stack([m.layer_nodes[k] for m in mbs])
+                                    .astype(np.int32)) for k in range(L + 1)],
+        "node_mask": [jnp.asarray(np.stack([m.node_mask[k] for m in mbs]))
+                      for k in range(L + 1)],
+    }
+
+
+# ---------------------------------------------------------------------------
+# model dispatch
+# ---------------------------------------------------------------------------
+def init_model_params(key, cfg: GNNConfig):
+    if cfg.model == "graphsage":
+        return sage_lib.init_params(key, cfg.feat_dim, cfg.hidden_size,
+                                    cfg.num_classes, cfg.num_layers)
+    return gat_lib.init_params(key, cfg.feat_dim, cfg.hidden_size,
+                               cfg.num_classes, cfg.num_layers, cfg.num_heads)
+
+
+def _forward(cfg, params, h0, valid0, blocks, dropout, seed, halo_hook,
+             use_kernel=False):
+    fwd = sage_lib.forward if cfg.model == "graphsage" else gat_lib.forward
+    return fwd(params, h0, valid0, blocks, dropout=dropout, seed=seed,
+               halo_hook=halo_hook, use_kernel=use_kernel)
+
+
+def layer_dims(cfg: GNNConfig) -> List[int]:
+    """Embedding dim held in HEC_l for l = 0..L-1 (inputs + hidden)."""
+    hid = cfg.hidden_size if cfg.model == "graphsage" \
+        else cfg.hidden_size * cfg.num_heads
+    return [cfg.feat_dim] + [hid] * (cfg.num_layers - 1)
+
+
+def aep_bytes_per_step(cfg: GNNConfig, num_ranks: int) -> int:
+    """Analytic AEP all_to_all payload per rank per step."""
+    dims = layer_dims(cfg)
+    nc = cfg.hec.push_limit
+    return num_ranks * nc * (4 * len(dims) + 4 * max(dims) * len(dims))
+
+
+def sync_bytes_per_step(cfg: GNNConfig, num_ranks: int) -> int:
+    nc = cfg.hec.push_limit
+    return num_ranks * nc * (4 + 4 * (cfg.feat_dim + 1))
+
+
+# ---------------------------------------------------------------------------
+# the trainer
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class DistTrainer:
+    cfg: GNNConfig
+    mesh: object
+    num_ranks: int
+    mode: str = "aep"           # aep | sync | drop
+    use_kernel: bool = False
+
+    def init_state(self, key, dist_data=None):
+        cfg = self.cfg
+        R = self.num_ranks
+        params = init_model_params(key, cfg)
+        opt_state = opt_lib.adam_init(params)
+        dims = layer_dims(cfg)
+        dmax = max(dims)
+        hec = [
+            jax.vmap(lambda _: hec_lib.hec_init(
+                cfg.hec.cache_size, cfg.hec.ways, dims[l]))(jnp.arange(R))
+            for l in range(cfg.num_layers)
+        ]
+        nc = cfg.hec.push_limit
+        d = cfg.hec.delay
+        L = cfg.num_layers
+        inflight = {
+            "tags": jnp.full((R, d, R, L, nc), -1, jnp.int32),
+            "embs": jnp.zeros((R, d, R, L, nc, dmax), jnp.float32),
+        }
+        return {"params": params, "opt_state": opt_state, "hec": hec,
+                "inflight": inflight, "step": jnp.zeros((), jnp.int32)}
+
+    # -- per-rank step body (inside shard_map) ------------------------------
+    def _rank_step(self, params, opt_state, hec, inflight, data, mb, seed):
+        cfg = self.cfg
+        L = cfg.num_layers
+        dims = layer_dims(cfg)
+        dmax = max(dims)
+        me = jax.lax.axis_index("data")
+
+        sq = lambda t: jax.tree_util.tree_map(lambda a: a[0], t)
+        data, mb = sq(data), sq(mb)
+        hec = [sq(h) for h in hec]
+        inflight = sq(inflight)
+
+        num_solid = data["num_solid"]
+        P_max = data["vid_o"].shape[0]
+
+        # (1) HEC tick + consume the delayed push (paper lines 8-9)
+        if self.mode == "aep":
+            hec = [hec_lib.hec_tick(h, cfg.hec.life_span) for h in hec]
+            for l in range(L):
+                tl = inflight["tags"][0, :, l].reshape(-1)
+                el = inflight["embs"][0, :, l, :, :dims[l]].reshape(-1, dims[l])
+                hec[l] = hec_lib.hec_store(hec[l], tl, el)
+
+        # (2) layer-0 inputs
+        nodes0 = mb["layer_nodes"][0]
+        mask0 = mb["node_mask"][0]
+        is_halo0 = (nodes0 >= num_solid) & mask0
+        solid_idx = jnp.clip(nodes0, 0, data["features"].shape[0] - 1)
+        h0 = data["features"][solid_idx] * (mask0 & ~is_halo0)[:, None]
+        valid0 = mask0 & ~is_halo0
+        vid_o_nodes = [jnp.where(n >= 0,
+                                 data["vid_o"][jnp.clip(n, 0, P_max - 1)], -1)
+                       for n in mb["layer_nodes"]]
+
+        if self.mode == "aep":
+            hit0, emb0 = hec_lib.hec_lookup(hec[0], vid_o_nodes[0])
+            use0 = is_halo0 & hit0
+            h0 = jnp.where(use0[:, None], emb0, h0)
+            valid0 = valid0 | use0
+            hits0 = (jnp.sum(use0), jnp.sum(is_halo0))
+        elif self.mode == "sync":
+            h0, got = self._sync_fetch(data, mb, vid_o_nodes[0], is_halo0, h0)
+            valid0 = valid0 | got
+            hits0 = (got.sum(), jnp.sum(is_halo0))
+        else:
+            hits0 = (jnp.zeros((), jnp.int32), jnp.sum(is_halo0))
+
+        def loss_fn(params):
+            captured = {}
+            hits = [hits0]
+
+            def halo_hook(k, h, valid):
+                if k == 0:
+                    captured[0] = (h, valid)
+                    return h, valid
+                nodes_k = mb["layer_nodes"][k]
+                maskk = mb["node_mask"][k]
+                is_halo = (nodes_k >= num_solid) & maskk
+                if self.mode == "aep" and k < L:
+                    hit, emb = hec_lib.hec_lookup(hec[k], vid_o_nodes[k])
+                    use = is_halo & hit
+                    h = jnp.where(use[:, None], emb[:, :h.shape[1]], h)
+                    valid = (valid & ~is_halo) | use
+                    hits.append((jnp.sum(use), jnp.sum(is_halo)))
+                else:
+                    valid = valid & ~is_halo
+                if k < L:
+                    captured[k] = (h, valid)
+                return h, valid
+
+            blocks = {"nbr_idx": mb["nbr_idx"]}
+            out, valid = _forward(cfg, params, h0, valid0, blocks,
+                                  cfg.dropout, seed, halo_hook,
+                                  self.use_kernel)
+            B = mb["seeds"].shape[0]
+            logits = out[:B].astype(jnp.float32)
+            lmask = mb["seed_mask"] & valid[:B]
+            labels = mb["labels"]
+            logz = jax.scipy.special.logsumexp(logits, -1)
+            gold = jnp.take_along_axis(logits, labels[:, None], -1)[:, 0]
+            nll = (logz - gold) * lmask
+            loss = nll.sum() / jnp.maximum(lmask.sum(), 1)
+            acc = (((jnp.argmax(logits, -1) == labels) & lmask).sum()
+                   / jnp.maximum(lmask.sum(), 1))
+            return loss, (acc, captured, hits)
+
+        (loss, (acc, captured, hits)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+        grads = jax.lax.pmean(grads, "data")
+        loss_m = jax.lax.pmean(loss, "data")
+        acc_m = jax.lax.pmean(acc, "data")
+
+        # (3) AEP push (paper lines 14-24) + all_to_all
+        if self.mode == "aep":
+            inflight = self._aep_push(data, mb, captured, vid_o_nodes,
+                                      num_solid, inflight, seed, dims, dmax,
+                                      me)
+
+        params, opt_state, diag = opt_lib.adam_update(
+            grads, opt_state, params,
+            opt_lib.AdamConfig(lr=cfg.lr, grad_clip=1.0))
+
+        metrics = {"loss": loss_m, "acc": acc_m,
+                   "grad_norm": diag["grad_norm"]}
+        for l, (h_cnt, t_cnt) in enumerate(hits):
+            metrics[f"hec_hits_l{l}"] = jax.lax.psum(h_cnt, "data")
+            metrics[f"hec_halos_l{l}"] = jax.lax.psum(t_cnt, "data")
+
+        exp = lambda t: jax.tree_util.tree_map(lambda a: a[None], t)
+        return (params, opt_state, [exp(h) for h in hec], exp(inflight),
+                metrics)
+
+    def _aep_push(self, data, mb, captured, vid_o_nodes, num_solid,
+                  inflight, seed, dims, dmax, me):
+        cfg = self.cfg
+        R = self.num_ranks
+        L = cfg.num_layers
+        nc = cfg.hec.push_limit
+        nodes0 = mb["layer_nodes"][0]
+        mask0 = mb["node_mask"][0]
+        vid0 = vid_o_nodes[0]
+        is_solid = (nodes0 < num_solid) & (nodes0 >= 0) & mask0
+        N0 = nodes0.shape[0]
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(7), seed), me)
+        u = jax.random.uniform(key, (R, N0), minval=1e-6, maxval=1.0)
+
+        db = data["db_halo"]                        # [R, D] sorted + sentinel
+        tags_out, pos_out = [], []
+        for j in range(R):
+            dbj = db[j]
+            loc = jnp.clip(jnp.searchsorted(dbj, vid0), 0, dbj.shape[0] - 1)
+            member = (dbj[loc] == vid0) & is_solid
+            score = jnp.where(member, u[j], -1.0)
+            topv, topi = jax.lax.top_k(score, nc)
+            ok = topv > 0
+            tags_out.append(jnp.where(ok, vid0[topi], -1))
+            pos_out.append(jnp.where(ok, topi, 0))
+        base_tags = jnp.stack(tags_out)             # [R, nc]
+        pos = jnp.stack(pos_out)                    # [R, nc]
+        base_ok = base_tags >= 0
+
+        tags = jnp.zeros((R, L, nc), jnp.int32)
+        embs = jnp.zeros((R, L, nc, dmax), jnp.float32)
+        for l in range(L):
+            h_l, valid_l = captured[l]
+            n_l = h_l.shape[0]
+            p_cl = jnp.clip(pos, 0, n_l - 1)
+            ok = base_ok & (pos < n_l) & valid_l[p_cl]
+            e = jnp.where(ok[..., None], h_l[p_cl].astype(jnp.float32), 0.0)
+            embs = embs.at[:, l, :, :dims[l]].set(e)
+            tags = tags.at[:, l].set(jnp.where(ok, base_tags, -1))
+
+        rec_tags = jax.lax.all_to_all(tags, "data", 0, 0)
+        rec_embs = jax.lax.all_to_all(embs, "data", 0, 0)
+        return {
+            "tags": jnp.concatenate(
+                [inflight["tags"][1:], rec_tags[None]], 0),
+            "embs": jnp.concatenate(
+                [inflight["embs"][1:], rec_embs[None]], 0),
+        }
+
+    def _sync_fetch(self, data, mb, vid0, is_halo0, h0):
+        """DistDGL-like blocking fetch of fresh layer-0 halo features."""
+        cfg = self.cfg
+        R = self.num_ranks
+        nc = cfg.hec.push_limit
+        N0 = vid0.shape[0]
+        # request the first nc halos (by position) from every rank; the
+        # owner answers.  (DistDGL prefetches remote features for the whole
+        # sampled neighborhood right after minibatch creation.)
+        score = jnp.where(is_halo0,
+                          (jnp.arange(N0, 0, -1, dtype=jnp.float32)), -1.0)
+        topv, topi = jax.lax.top_k(score, nc)
+        ok = topv > 0
+        req_row = jnp.where(ok, vid0[topi], -1)
+        req = jnp.broadcast_to(req_row, (R, nc))
+        pos_row = jnp.where(ok, topi, 0)
+        got_req = jax.lax.all_to_all(req, "data", 0, 0)     # [R_from, nc]
+        S = data["features"].shape[0]
+        solid_vids = jnp.where(jnp.arange(S) < data["num_solid"],
+                               data["vid_o"][:S], _SENTINEL)
+        order = jnp.argsort(solid_vids)
+        sorted_vids = solid_vids[order]
+        loc = jnp.clip(jnp.searchsorted(sorted_vids, got_req), 0, S - 1)
+        own = (sorted_vids[loc] == got_req) & (got_req >= 0)
+        feats = data["features"][order[loc]] * own[..., None]
+        resp = jax.lax.all_to_all(
+            jnp.concatenate([feats, own[..., None].astype(jnp.float32)], -1),
+            "data", 0, 0)                                   # [R, nc, F+1]
+        got_feats, got_ok = resp[..., :-1], resp[..., -1] > 0.5
+        # each requested halo answered by exactly its owner -> sum over ranks
+        add = (got_feats * got_ok[..., None]).sum(0)        # [nc, F]
+        any_ok = got_ok.any(0)                              # [nc]
+        h0 = h0.at[pos_row].add(jnp.where(any_ok[:, None], add, 0.0))
+        got = jnp.zeros(N0, bool).at[pos_row].max(any_ok)
+        return h0, got & is_halo0
+
+    # -- public API ----------------------------------------------------------
+    def make_step(self, dist_data=None, donate=True):
+        cfg = self.cfg
+        shard = P("data")
+        repl = P()
+
+        def stepf(params, opt_state, hec, inflight, data, mb, seed):
+            return self._rank_step(params, opt_state, hec, inflight, data,
+                                   mb, seed)
+
+        smapped = jax.shard_map(
+            stepf, mesh=self.mesh,
+            in_specs=(repl, repl, [shard] * cfg.num_layers, shard, shard,
+                      shard, repl),
+            out_specs=(repl, repl, [shard] * cfg.num_layers, shard, repl),
+            check_vma=False)
+        return jax.jit(smapped, donate_argnums=(1, 2, 3) if donate else ())
+
+    def train_epochs(self, ps, dist_data, state, num_epochs, seed0=0,
+                     step_fn=None, log_every=0):
+        cfg = self.cfg
+        rng = np.random.default_rng(seed0)
+        step_fn = step_fn or self.make_step(dist_data)
+        R = self.num_ranks
+        history = []
+        step_idx = int(state["step"])
+        for ep in range(num_epochs):
+            per_rank = [epoch_minibatches(ps.parts[r], cfg.batch_size, rng)
+                        for r in range(R)]
+            M = max(len(b) for b in per_rank)
+            ep_metrics = []
+            for k in range(M):
+                seeds = [per_rank[r][k % len(per_rank[r])] for r in range(R)]
+                mb = sample_step(ps, cfg, seeds, rng)
+                (state["params"], state["opt_state"], state["hec"],
+                 state["inflight"], metrics) = step_fn(
+                    state["params"], state["opt_state"], state["hec"],
+                    state["inflight"], dist_data, mb, jnp.uint32(step_idx))
+                ep_metrics.append({k_: float(v) for k_, v in metrics.items()})
+                step_idx += 1
+            mean = {k_: float(np.mean([m[k_] for m in ep_metrics]))
+                    for k_ in ep_metrics[0]}
+            history.append(mean)
+            if log_every:
+                hl = [f"l{l}:{mean.get(f'hec_hits_l{l}', 0)/max(mean.get(f'hec_halos_l{l}',1),1):.2f}"
+                      for l in range(cfg.num_layers)]
+            if log_every and (ep % log_every == 0 or ep == num_epochs - 1):
+                print(f"[{self.mode}] epoch {ep}: loss={mean['loss']:.4f} "
+                      f"acc={mean['acc']:.3f} hit-rates {' '.join(hl)}")
+        state["step"] = jnp.asarray(step_idx, jnp.int32)
+        return state, history
+
+    def evaluate(self, ps, dist_data, state, num_batches=8, seed0=123,
+                 step_fn=None):
+        """Test accuracy via sampled minibatches over test vertices."""
+        cfg = self.cfg
+        rng = np.random.default_rng(seed0)
+        R = self.num_ranks
+        if step_fn is None:
+            ecfg = dataclasses.replace(cfg, dropout=0.0)
+            step_fn = dataclasses.replace(self, cfg=ecfg).make_step(
+                donate=False)
+        accs = []
+        for k in range(num_batches):
+            seeds = []
+            for r in range(R):
+                test = np.flatnonzero(ps.parts[r].test_mask)
+                rng.shuffle(test)
+                seeds.append(test[:cfg.batch_size])
+            mb = sample_step(ps, cfg, seeds, rng)
+            (_, _, _, _, metrics) = step_fn(
+                state["params"], state["opt_state"], state["hec"],
+                state["inflight"], dist_data, mb, jnp.uint32(10_000 + k))
+            accs.append(float(metrics["acc"]))
+        return float(np.mean(accs))

@@ -1,0 +1,149 @@
+"""LM training / serving steps for the assigned architectures + input specs.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, no device allocation) — the
+dry-run lowers against these.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import base as cfgbase
+from repro.models.transformer import model as M
+from repro.train import loss as loss_lib
+from repro.train import optimizer as opt_lib
+
+
+# ---------------------------------------------------------------------------
+# batch construction
+# ---------------------------------------------------------------------------
+def batch_spec(cfg, batch: int, seq: int) -> dict:
+    """ShapeDtypeStructs for one training/prefill batch."""
+    sds = jax.ShapeDtypeStruct
+    spec = {
+        "tokens": sds((batch, seq), jnp.int32),
+        "labels": sds((batch, seq), jnp.int32),
+    }
+    if cfg.num_patch_tokens:
+        spec["patch_embeds"] = sds((batch, cfg.num_patch_tokens, cfg.d_model),
+                                   jnp.bfloat16)
+        spec["positions"] = sds((batch, 3, seq + cfg.num_patch_tokens),
+                                jnp.int32)
+    if cfg.is_encoder_decoder:
+        spec["frame_embeds"] = sds((batch, cfg.num_frame_tokens, cfg.d_model),
+                                   jnp.bfloat16)
+    return spec
+
+
+def batch_axes(cfg) -> dict:
+    axes = {"tokens": ("batch", "seq"), "labels": ("batch", "seq")}
+    if cfg.num_patch_tokens:
+        axes["patch_embeds"] = ("batch", None, None)
+        axes["positions"] = ("batch", None, None)
+    if cfg.is_encoder_decoder:
+        axes["frame_embeds"] = ("batch", None, None)
+    return axes
+
+
+def _extra(batch) -> Optional[dict]:
+    extra = {k: v for k, v in batch.items()
+             if k in ("patch_embeds", "frame_embeds", "positions")}
+    return extra or None
+
+
+# ---------------------------------------------------------------------------
+# train step
+# ---------------------------------------------------------------------------
+def make_train_step(cfg, opt_cfg: opt_lib.AdamConfig):
+    def loss_fn(params, batch):
+        hidden = M.forward(params, cfg, batch["tokens"], _extra(batch),
+                           mode="train")
+        if cfg.num_patch_tokens:          # VLM: loss only on the text suffix
+            hidden = hidden[:, cfg.num_patch_tokens:]
+        loss = loss_lib.chunked_lm_loss(params, cfg, hidden, batch["labels"])
+        return loss
+
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        params, opt_state, diag = opt_lib.adam_update(
+            grads, opt_state, params, opt_cfg)
+        metrics = {"loss": loss, **diag}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# serving steps
+# ---------------------------------------------------------------------------
+def make_prefill_step(cfg):
+    def prefill_step(params, batch):
+        hidden, caches = M.forward(params, cfg, batch["tokens"],
+                                   _extra(batch), mode="prefill")
+        last = hidden[:, -1:, :]
+        logits = M.logits_from_hidden(params, cfg, last)
+        return logits, caches
+    return prefill_step
+
+
+def make_serve_step(cfg):
+    """One decode step: new token against a seq_len-deep cache."""
+    def serve_step(params, caches, token, pos, extra=None):
+        logits, caches = M.decode_step(params, cfg, caches, token, pos, extra)
+        next_token = jnp.argmax(logits[:, -1, :], axis=-1)[:, None]
+        return next_token.astype(jnp.int32), logits, caches
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# abstract specs (dry-run entry points)
+# ---------------------------------------------------------------------------
+def abstract_params(cfg, dtype=jnp.float32):
+    sds = jax.eval_shape(functools.partial(M.init_params, cfg=cfg),
+                         jax.random.key(0))
+    if dtype != jnp.float32:
+        sds = jax.tree_util.tree_map(
+            lambda s: jax.ShapeDtypeStruct(s.shape, dtype), sds)
+    return sds
+
+
+def abstract_opt_state(params_sds):
+    return jax.eval_shape(opt_lib.adam_init, params_sds)
+
+
+def abstract_cache(cfg, batch: int, cache_len: int, dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        functools.partial(M.init_cache, cfg, batch, cache_len, dtype))
+
+
+def opt_state_axes(params_axes):
+    return {"mu": params_axes, "nu": params_axes, "step": ()}
+
+
+def input_specs(cfg, shape) -> dict:
+    """All abstract inputs for the given InputShape's step kind."""
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        params = abstract_params(cfg)
+        return {
+            "params": params,
+            "opt_state": abstract_opt_state(params),
+            "batch": batch_spec(cfg, shape.global_batch, shape.seq_len),
+        }
+    if shape.kind == "prefill":
+        return {
+            "params": abstract_params(cfg, jnp.bfloat16),
+            "batch": batch_spec(cfg, shape.global_batch, shape.seq_len),
+        }
+    if shape.kind == "decode":
+        return {
+            "params": abstract_params(cfg, jnp.bfloat16),
+            "caches": abstract_cache(cfg, shape.global_batch, shape.seq_len),
+            "token": sds((shape.global_batch, 1), jnp.int32),
+            "pos": sds((), jnp.int32),
+        }
+    raise ValueError(shape.kind)

@@ -1,0 +1,53 @@
+"""Losses. The LM loss is *vocab-chunked*: logits for the full sequence are
+never materialized — we scan over token chunks, computing [B, chunk, V]
+logits + their CE inside each step.  At train_4k x 256k-vocab the full
+logits tensor would be ~1 TB fp32; chunking caps the live buffer at
+tokens/num_chunks x V (sharded over "model" on the vocab dim)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray,
+                 mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """logits [..., V] fp32; labels [...] int32. Returns mean over mask."""
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(nll.dtype)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def chunked_lm_loss(params, cfg, hidden, labels, mask=None,
+                    num_chunks: int = 16, logits_fn=None):
+    """hidden [B,T,d]; labels [B,T]. Scans over T chunks.
+
+    Returns (loss, token_count-normalized) without materializing [B,T,V].
+    """
+    from repro.models.transformer.model import logits_from_hidden
+    logits_fn = logits_fn or logits_from_hidden
+    B, T, d = hidden.shape
+    num_chunks = min(num_chunks, T)
+    while T % num_chunks:
+        num_chunks -= 1
+    C = T // num_chunks
+    h = jnp.moveaxis(hidden.reshape(B, num_chunks, C, d), 1, 0)
+    y = jnp.moveaxis(labels.reshape(B, num_chunks, C), 1, 0)
+    if mask is None:
+        mask = jnp.ones_like(labels, jnp.float32)
+    m = jnp.moveaxis(mask.reshape(B, num_chunks, C), 1, 0)
+
+    def step(acc, xs):
+        hc, yc, mc = xs
+        logits = logits_fn(params, cfg, hc).astype(jnp.float32)
+        logz = jax.scipy.special.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yc[..., None], axis=-1)[..., 0]
+        nll = (logz - gold) * mc
+        return (acc[0] + nll.sum(), acc[1] + mc.sum()), None
+
+    (tot, cnt), _ = jax.lax.scan(step, (jnp.zeros(()), jnp.zeros(())),
+                                 (h, y, m))
+    return tot / jnp.maximum(cnt, 1.0)

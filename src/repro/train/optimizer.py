@@ -1,0 +1,71 @@
+"""Optimizers (Adam, SGD+momentum) as pure functions over pytrees."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-3
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 0.0        # 0 = off
+
+
+def adam_init(params) -> dict:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {
+        "mu": jax.tree_util.tree_map(zeros, params),
+        "nu": jax.tree_util.tree_map(zeros, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adam_update(grads, opt_state, params, cfg: AdamConfig):
+    """Returns (new_params, new_opt_state, diagnostics)."""
+    step = opt_state["step"] + 1
+    gnorm = global_norm(grads)
+    if cfg.grad_clip > 0:
+        scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    def upd(g, mu, nu, p):
+        g = g.astype(jnp.float32)
+        mu = b1 * mu + (1 - b1) * g
+        nu = b2 * nu + (1 - b2) * jnp.square(g)
+        mu_hat = mu / (1 - b1 ** step.astype(jnp.float32))
+        nu_hat = nu / (1 - b2 ** step.astype(jnp.float32))
+        delta = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        if cfg.weight_decay:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - cfg.lr * delta).astype(p.dtype), mu, nu
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(opt_state["mu"])
+    flat_nu = treedef.flatten_up_to(opt_state["nu"])
+    out = [upd(g, mu, nu, p) for g, mu, nu, p in
+           zip(flat_g, flat_mu, flat_nu, flat_p)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, {"mu": new_mu, "nu": new_nu, "step": step}, {"grad_norm": gnorm}
+
+
+def sgd_update(grads, params, lr: float):
+    return jax.tree_util.tree_map(
+        lambda p, g: (p.astype(jnp.float32) - lr * g.astype(jnp.float32)
+                      ).astype(p.dtype), params, grads)

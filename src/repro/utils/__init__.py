@@ -1,0 +1,1 @@
+from repro.utils.tree import tree_size_bytes, tree_count_params

@@ -1,0 +1,64 @@
+"""Parse collective ops + operand bytes out of compiled/lowered HLO text.
+
+``cost_analysis()`` does not report collective traffic, so the roofline's
+collective term is derived here: we scan the (SPMD-partitioned, per-device)
+HLO for all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute and sum their operand sizes.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g.:  %ag = f32[16,1024]{1,0} all-gather(f32[1,1024]{1,0} %x), ...
+#        ROOT %tuple ... = (f32[8], f32[8]) all-reduce(...)
+_OP_RE = re.compile(
+    r"=\s*(?P<out>\(?[a-z0-9]+\[[0-9,]*\][^ ]*\)?[^=]*?)\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_SHAPE_RE = re.compile(r"(?P<dt>[a-z][a-z0-9]+)\[(?P<dims>[0-9,]*)\]")
+
+
+def shape_bytes(dt: str, dims: str) -> int:
+    nb = _DTYPE_BYTES.get(dt)
+    if nb is None:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * nb
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Returns {op_name: {"count": int, "bytes": int}, ..., "total_bytes": int}.
+
+    Bytes counted are the *output* operand sizes of each collective op in the
+    per-device program (a reasonable proxy for per-device link traffic).
+    ``-done`` ops are skipped so async pairs aren't double counted.
+    """
+    stats: dict = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for line in hlo_text.splitlines():
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue
+        op = m.group("op")
+        out = m.group("out")
+        b = sum(shape_bytes(s.group("dt"), s.group("dims"))
+                for s in _SHAPE_RE.finditer(out))
+        stats[op]["count"] += 1
+        stats[op]["bytes"] += b
+    result = {k: dict(v) for k, v in stats.items()}
+    result["total_bytes"] = sum(v["bytes"] for v in stats.values())
+    return result

@@ -1,0 +1,281 @@
+"""Loop-aware cost analysis over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` on the CPU backend counts while-loop
+bodies ONCE (no trip-count multiplication), which silently undercounts any
+program built on ``lax.scan``/``lax.map`` — i.e. every model here (layer
+stacks, q-chunked attention, chunked CE loss).  This module re-derives the
+three roofline inputs from the HLO text itself, walking the computation
+call graph and multiplying by ``known_trip_count`` annotations:
+
+  * flops             — from dot ops (output elements x contracted size x 2)
+  * bytes accessed    — per top-level op: operand bytes + output bytes
+                        (post-fusion HLO, so fusion boundaries == real
+                        memory traffic)
+  * collective bytes  — all-gather/all-reduce/reduce-scatter/all-to-all/
+                        collective-permute output bytes (async pairs counted
+                        once at -start)
+
+Validated against analytic 6*N*D in tests/test_hlo_cost.py.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "token": 0,
+    "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_COMMENT_RE = re.compile(r"/\*.*?\*/")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_KIND_RE = re.compile(r"([\w\-]+)\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"(?:calls|to_apply)=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*"?n"?[^0-9]*([0-9]+)')
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*\S.*\{\s*$")
+_CDIMS_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_LHS_BATCH_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# ops that don't move memory (aliases / metadata)
+_FREE_OPS = {"parameter", "get-tuple-element", "tuple", "bitcast", "constant",
+             "after-all", "partition-id", "replica-id", "iota"}
+
+
+def _shape_elems_bytes(type_str):
+    """'f32[8,16]' or tuple '(f32[2], s32[])' -> (elems, bytes) summed."""
+    elems = 0
+    nbytes = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        elems += n
+        nbytes += n * _DTYPE_BYTES[dt]
+    return elems, nbytes
+
+
+@dataclass
+class Op:
+    name: str
+    kind: str
+    out_type: str
+    line: str
+    operands: list = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    defs: dict = field(default_factory=dict)    # op name -> out_type
+
+
+def parse_hlo(text: str) -> dict:
+    comps: dict[str, Computation] = {}
+    cur = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        mc = _COMP_RE.match(line)
+        if mc and ("->" in line) and line.endswith("{"):
+            cur = Computation(mc.group(1))
+            comps[cur.name] = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        line = _COMMENT_RE.sub("", line)
+        md = _DEF_RE.match(line)
+        if not md:
+            continue
+        name, rhs = md.group(1), md.group(2)
+        mk = _KIND_RE.search(rhs)
+        if not mk:
+            continue
+        out_type, kind = rhs[:mk.start()].strip(), mk.group(1)
+        rest = rhs[mk.end():]
+        args_str = rest.split(")", 1)[0]
+        operands = _OPERAND_RE.findall(args_str)
+        op = Op(name=name, kind=kind, out_type=out_type, line=line,
+                operands=operands)
+        cur.ops.append(op)
+        cur.defs[name] = out_type
+    return comps
+
+
+def _find_entry(comps: dict, text: str) -> str:
+    m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.MULTILINE)
+    if m:
+        return m.group(1)
+    # fallback: computation never referenced by others
+    referenced = set()
+    for c in comps.values():
+        for op in c.ops:
+            for pat in (_CALLS_RE, _BODY_RE, _COND_RE):
+                mm = pat.search(op.line)
+                if mm:
+                    referenced.add(mm.group(1))
+    for name in comps:
+        if name not in referenced:
+            return name
+    return next(iter(comps))
+
+
+def _dot_flops(op: Op, comp: Computation, all_defs: dict) -> float:
+    out_elems, _ = _shape_elems_bytes(op.out_type)
+    m = _CDIMS_RE.search(op.line)
+    contract = 1
+    if m and op.operands:
+        lhs_type = comp.defs.get(op.operands[0]) or all_defs.get(op.operands[0], "")
+        sm = _SHAPE_RE.search(lhs_type)
+        if sm:
+            dims = [int(d) for d in sm.group(2).split(",") if d]
+            for ci in m.group(1).split(","):
+                if ci and int(ci) < len(dims):
+                    contract *= dims[int(ci)]
+    return 2.0 * out_elems * contract
+
+
+_PARAM_IDX_RE = re.compile(r"parameter\((\d+)\)")
+
+
+def _op_bytes(op: Op, comp: Computation, comps: dict, all_defs: dict) -> float:
+    """Memory traffic of one top-level op.
+
+    dynamic-slice reads only the slice; dynamic-update-slice writes only
+    the update (XLA aliases the buffer in place) — counting the full
+    operand would bill a lax.scan's stacked xs/ys buffers once per trip
+    and swamp every scan-heavy model's roofline.  For fusions we map the
+    callee's internal DS/DUS ops back to the fusion's operand positions
+    and re-cost those operands/outputs accordingly.
+    """
+    _, ob = _shape_elems_bytes(op.out_type)
+    opsizes = []
+    for o in op.operands:
+        t = comp.defs.get(o) or all_defs.get(o)
+        opsizes.append(_shape_elems_bytes(t)[1] if t else 0)
+
+    if op.kind == "dynamic-slice":
+        return 2.0 * ob
+    if op.kind == "dynamic-update-slice":
+        upd = opsizes[1] if len(opsizes) > 1 else 0
+        return 2.0 * upd + sum(opsizes[2:])
+    if op.kind != "fusion":
+        return ob + sum(opsizes)
+
+    mcall = _CALLS_RE.search(op.line)
+    callee = comps.get(mcall.group(1)) if mcall else None
+    if callee is None:
+        return ob + sum(opsizes)
+    # param name -> fusion operand index
+    param_of = {}
+    for cop in callee.ops:
+        if cop.kind == "parameter":
+            mi = _PARAM_IDX_RE.search(cop.line)
+            if mi:
+                param_of[cop.name] = int(mi.group(1))
+    replace: dict[int, float] = {}
+    out_credit = 0.0
+    for cop in callee.ops:
+        if cop.kind == "dynamic-slice" and cop.operands:
+            pi = param_of.get(cop.operands[0])
+            if pi is not None and pi < len(opsizes):
+                sb = _shape_elems_bytes(cop.out_type)[1]
+                replace[pi] = min(replace.get(pi, opsizes[pi]), sb)
+        elif cop.kind == "dynamic-update-slice" and len(cop.operands) > 1:
+            pi = param_of.get(cop.operands[0])
+            ut = callee.defs.get(cop.operands[1])
+            ub = _shape_elems_bytes(ut)[1] if ut else 0
+            if pi is not None and pi < len(opsizes):
+                replace[pi] = min(replace.get(pi, opsizes[pi]), ub)
+                # the aliased full-buffer output writes only the update
+                buf = opsizes[pi]
+                out_credit += max(0.0, buf - ub)
+    total_in = sum(replace.get(i, s) for i, s in enumerate(opsizes))
+    return max(0.0, ob - out_credit) + total_in
+
+
+def analyze(text: str) -> dict:
+    """Loop-aware flops / bytes / collective bytes for one HLO module."""
+    comps = parse_hlo(text)
+    entry = _find_entry(comps, text)
+    all_defs = {}
+    for c in comps.values():
+        all_defs.update(c.defs)
+
+    # computation multipliers via BFS over the call graph
+    mult: dict[str, float] = defaultdict(float)
+    mult[entry] = 1.0
+    # classify computations called via fusion (their ops don't add bytes)
+    fusion_called: set[str] = set()
+    order = [entry]
+    seen = {entry}
+    i = 0
+    while i < len(order):
+        cname = order[i]
+        i += 1
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        m = mult[cname]
+        for op in comp.ops:
+            trip = 1.0
+            tm = _TRIP_RE.search(op.line)
+            if tm:
+                trip = float(tm.group(1))
+            for pat, is_body in ((_BODY_RE, True), (_COND_RE, True),
+                                 (_CALLS_RE, False)):
+                mm = pat.search(op.line)
+                if not mm:
+                    continue
+                callee = mm.group(1)
+                factor = trip if is_body and op.kind == "while" else 1.0
+                mult[callee] += m * factor
+                if op.kind == "fusion" and not is_body:
+                    fusion_called.add(callee)
+                if callee not in seen:
+                    seen.add(callee)
+                    order.append(callee)
+
+    flops = 0.0
+    bytes_accessed = 0.0
+    coll = defaultdict(lambda: {"count": 0.0, "bytes": 0.0})
+    for cname, comp in comps.items():
+        m = mult.get(cname, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = cname in fusion_called
+        for op in comp.ops:
+            if op.kind in ("dot", "convolution"):
+                flops += m * _dot_flops(op, comp, all_defs)
+            if not in_fusion and op.kind not in _FREE_OPS:
+                bytes_accessed += m * _op_bytes(op, comp, comps, all_defs)
+            base = op.kind
+            for ck in COLLECTIVES:
+                if base == ck or base == ck + "-start":
+                    _, ob = _shape_elems_bytes(op.out_type)
+                    coll[ck]["count"] += m
+                    coll[ck]["bytes"] += m * ob
+                    break
+    coll_total = sum(v["bytes"] for v in coll.values())
+    return {
+        "flops": flops,
+        "bytes_accessed": bytes_accessed,
+        "collectives": {k: dict(v) for k, v in coll.items()},
+        "collective_bytes": coll_total,
+    }

@@ -1,0 +1,21 @@
+"""Small pytree helpers."""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def tree_count_params(tree) -> int:
+    return sum(int(np.prod(x.shape)) for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_size_bytes(tree) -> int:
+    return sum(int(np.prod(x.shape)) * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_finite(tree) -> bool:
+    import jax.numpy as jnp
+    leaves = jax.tree_util.tree_leaves(tree)
+    return all(bool(jnp.all(jnp.isfinite(x))) for x in leaves
+               if jnp.issubdtype(x.dtype, jnp.floating))

@@ -1,0 +1,105 @@
+"""Per-architecture smoke tests: REDUCED variant of each assigned family
+(<=2 units, d_model<=512, <=4 experts per the brief), one forward + one
+train step + one decode step on CPU; asserts shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch, list_archs
+from repro.models.transformer import model as M
+from repro.train import lm_trainer
+from repro.train.optimizer import AdamConfig, adam_init
+
+ARCHS = list_archs()
+B, T = 2, 16
+
+
+def _batch(cfg, key):
+    ks = jax.random.split(key, 3)
+    tokens = jax.random.randint(ks[0], (B, T), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, 1)}
+    if cfg.num_patch_tokens:
+        batch["patch_embeds"] = jax.random.normal(
+            ks[1], (B, cfg.num_patch_tokens, cfg.d_model)).astype(jnp.float32)
+    if cfg.is_encoder_decoder:
+        batch["frame_embeds"] = jax.random.normal(
+            ks[2], (B, cfg.num_frame_tokens, cfg.d_model)).astype(jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_finite(arch):
+    cfg = get_arch(arch).reduced()
+    params = M.init_params(jax.random.key(0), cfg)
+    batch = _batch(cfg, jax.random.key(1))
+    h = M.forward(params, cfg, batch["tokens"],
+                  lm_trainer._extra(batch), mode="train")
+    exp_T = T + cfg.num_patch_tokens
+    assert h.shape == (B, exp_T, cfg.d_model)
+    assert bool(jnp.all(jnp.isfinite(h)))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step(arch):
+    cfg = get_arch(arch).reduced()
+    params = M.init_params(jax.random.key(0), cfg)
+    opt = adam_init(params)
+    step = lm_trainer.make_train_step(cfg, AdamConfig(lr=1e-3))
+    batch = _batch(cfg, jax.random.key(2))
+    params2, opt2, metrics = step(params, opt, batch)
+    loss = float(metrics["loss"])
+    assert np.isfinite(loss) and loss > 0
+    # params actually changed
+    delta = sum(float(jnp.abs(a - b).sum()) for a, b in zip(
+        jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(params2)))
+    assert delta > 0
+    # a second step reduces nothing catastrophic (still finite)
+    _, _, m2 = step(params2, opt2, batch)
+    assert np.isfinite(float(m2["loss"]))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step(arch):
+    cfg = get_arch(arch).reduced()
+    params = M.init_params(jax.random.key(0), cfg)
+    serve = lm_trainer.make_serve_step(cfg)
+    cache = M.init_cache(cfg, B, 32)
+    token = jnp.zeros((B, 1), jnp.int32)
+    for pos in range(3):
+        token, logits, cache = serve(params, cache, token, jnp.int32(pos))
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert token.shape == (B, 1)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ["minitron-4b", "mixtral-8x7b",
+                                  "xlstm-1.3b", "recurrentgemma-9b"])
+def test_prefill_then_decode_consistency(arch):
+    """greedy decode after prefill == greedy decode after manual stepping."""
+    cfg = get_arch(arch).reduced()
+    params = M.init_params(jax.random.key(0), cfg)
+    tokens = jax.random.randint(jax.random.key(3), (1, 8), 0, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": tokens}
+    prefill = lm_trainer.make_prefill_step(cfg)
+    logits_p, caches = prefill(params, batch)
+    # manual: decode tokens one by one through an empty cache
+    cache2 = M.init_cache(cfg, 1, 8)
+    for t in range(8):
+        logits_m, cache2 = M.decode_step(params, cfg, cache2,
+                                         tokens[:, t:t+1], jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(logits_p, np.float32),
+                               np.asarray(logits_m, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_moe_gather_matches_einsum():
+    """The two MoE dispatch implementations agree."""
+    import dataclasses
+    cfg = get_arch("mixtral-8x7b").reduced()
+    params = M.init_params(jax.random.key(0), cfg)
+    tokens = jax.random.randint(jax.random.key(4), (2, 32), 0, cfg.vocab_size)
+    h_e = M.forward(params, dataclasses.replace(cfg, moe_impl="einsum"), tokens)
+    h_g = M.forward(params, dataclasses.replace(cfg, moe_impl="gather"), tokens)
+    np.testing.assert_allclose(np.asarray(h_e), np.asarray(h_g),
+                               atol=1e-4, rtol=1e-4)

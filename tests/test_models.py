@@ -1,0 +1,174 @@
+"""Recurrent-block equivalences + loss + optimizer + checkpoint tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.transformer import xlstm as X
+from repro.models.transformer import rglru as R
+from repro.models.transformer.attention import KVCache, dot_attention
+from repro.train import loss as loss_lib
+from repro.train import optimizer as opt_lib
+from repro.train import checkpoint
+
+
+def test_mlstm_chunkwise_matches_sequential():
+    B, T, H, dh = 2, 48, 3, 8
+    ks = jax.random.split(jax.random.key(0), 5)
+    q = jax.random.normal(ks[0], (B, T, H, dh))
+    k = jax.random.normal(ks[1], (B, T, H, dh))
+    v = jax.random.normal(ks[2], (B, T, H, dh))
+    i_raw = jax.random.normal(ks[3], (B, T, H))
+    f_raw = jax.random.normal(ks[4], (B, T, H)) + 2.0
+    h_seq, st_seq = X.mlstm_sequential(q, k, v, i_raw, f_raw)
+    h_chk, st_chk = X.mlstm_chunkwise(q, k, v, i_raw, f_raw, chunk=16)
+    np.testing.assert_allclose(h_seq, h_chk, atol=2e-5, rtol=2e-5)
+    for a, b in zip(st_seq, st_chk):
+        np.testing.assert_allclose(a, b, atol=2e-4, rtol=2e-3)
+
+
+def test_mlstm_chunkwise_ragged_tail():
+    B, T, H, dh = 1, 37, 2, 4      # T not divisible by chunk
+    ks = jax.random.split(jax.random.key(1), 5)
+    args = [jax.random.normal(ks[i], (B, T, H, dh)) for i in range(3)]
+    gates = [jax.random.normal(ks[3], (B, T, H)),
+             jax.random.normal(ks[4], (B, T, H))]
+    h_seq, _ = X.mlstm_sequential(*args, *gates)
+    h_chk, _ = X.mlstm_chunkwise(*args, *gates, chunk=16)
+    np.testing.assert_allclose(h_seq, h_chk, atol=2e-5, rtol=2e-5)
+
+
+def test_mlstm_decode_continues_sequence():
+    """decode steps after a chunkwise prefix == one long sequential run."""
+    B, T, H, dh = 1, 24, 2, 4
+    ks = jax.random.split(jax.random.key(2), 5)
+    q = jax.random.normal(ks[0], (B, T, H, dh))
+    k = jax.random.normal(ks[1], (B, T, H, dh))
+    v = jax.random.normal(ks[2], (B, T, H, dh))
+    ir = jax.random.normal(ks[3], (B, T, H))
+    fr = jax.random.normal(ks[4], (B, T, H)) + 2.0
+    full, _ = X.mlstm_sequential(q, k, v, ir, fr)
+    _, st = X.mlstm_chunkwise(q[:, :16], k[:, :16], v[:, :16],
+                              ir[:, :16], fr[:, :16], chunk=8)
+    outs = []
+    for t in range(16, T):
+        h, st = X.mlstm_step(q[:, t:t+1], k[:, t:t+1], v[:, t:t+1],
+                             ir[:, t:t+1], fr[:, t:t+1], st)
+        outs.append(h)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(full[:, 16:], got, atol=2e-5, rtol=2e-5)
+
+
+def test_rglru_scan_matches_stepwise():
+    B, T, W = 2, 20, 16
+    ks = jax.random.split(jax.random.key(3), 4)
+    x = jax.random.normal(ks[0], (B, T, W))
+    r = jax.nn.sigmoid(jax.random.normal(ks[1], (B, T, W)))
+    i = jax.nn.sigmoid(jax.random.normal(ks[2], (B, T, W)))
+    lam = jax.random.normal(ks[3], (W,))
+    h_par, h_last = R.rglru_scan(x, r, i, lam)
+    h = jnp.zeros((B, W))
+    outs = []
+    for t in range(T):
+        o, h = R.rglru_step(x[:, t:t+1], r[:, t:t+1], i[:, t:t+1], lam, h)
+        outs.append(o)
+    got = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(h_par, got, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(h_last, h, atol=1e-5, rtol=1e-5)
+
+
+def test_rglru_carry_state():
+    B, T, W = 1, 16, 8
+    ks = jax.random.split(jax.random.key(4), 4)
+    x = jax.random.normal(ks[0], (B, T, W))
+    r = jax.nn.sigmoid(jax.random.normal(ks[1], (B, T, W)))
+    i = jax.nn.sigmoid(jax.random.normal(ks[2], (B, T, W)))
+    lam = jax.random.normal(ks[3], (W,))
+    full, _ = R.rglru_scan(x, r, i, lam)
+    h1, hl = R.rglru_scan(x[:, :8], r[:, :8], i[:, :8], lam)
+    h2, _ = R.rglru_scan(x[:, 8:], r[:, 8:], i[:, 8:], lam, h0=hl)
+    np.testing.assert_allclose(full, jnp.concatenate([h1, h2], 1),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_causal_conv1d_streaming():
+    B, T, D, W = 1, 12, 4, 4
+    x = jax.random.normal(jax.random.key(5), (B, T, D))
+    w = jax.random.normal(jax.random.key(6), (W, D))
+    full, _ = X.causal_conv1d(x, w)
+    y1, buf = X.causal_conv1d(x[:, :5], w)
+    y2, _ = X.causal_conv1d(x[:, 5:], w, buf)
+    np.testing.assert_allclose(full, jnp.concatenate([y1, y2], 1),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_attention_ring_cache_equals_window_attention():
+    """Decoding with a ring-buffer SWA cache == full attention with window
+    masking (positions drive the mask, not slot order)."""
+    B, H, dh, W = 1, 2, 8, 8
+    T = 20
+    ks = jax.random.split(jax.random.key(7), 3)
+    k_all = jax.random.normal(ks[0], (B, T, H, dh))
+    v_all = jax.random.normal(ks[1], (B, T, H, dh))
+    q = jax.random.normal(ks[2], (B, 1, H, dh))
+    cache = KVCache.init(B, W, H, dh, jnp.float32, ring=True)
+    for t in range(T):
+        cache = cache.update(k_all[:, t:t+1], v_all[:, t:t+1], jnp.int32(t))
+    pos = jnp.full((B, 1), T - 1, jnp.int32)
+    out_ring = dot_attention(q, cache.k, cache.v, pos, cache.pos,
+                             causal=True, window=W)
+    kv_pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+    out_full = dot_attention(q, k_all, v_all, pos, kv_pos, causal=True,
+                             window=W)
+    np.testing.assert_allclose(out_ring, out_full, atol=1e-5, rtol=1e-5)
+
+
+def test_attention_chunked_equals_unchunked():
+    B, T, H, dh = 2, 40, 4, 8
+    ks = jax.random.split(jax.random.key(8), 3)
+    q = jax.random.normal(ks[0], (B, T, H, dh))
+    k = jax.random.normal(ks[1], (B, T, H, dh))
+    v = jax.random.normal(ks[2], (B, T, H, dh))
+    pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+    a = dot_attention(q, k, v, pos, pos, q_chunk=16)
+    b = dot_attention(q, k, v, pos, pos, q_chunk=4096)
+    np.testing.assert_allclose(a, b, atol=1e-5, rtol=1e-5)
+
+
+def test_chunked_lm_loss_matches_full():
+    from repro.configs import get_arch
+    from repro.models.transformer import model as M
+    cfg = get_arch("minitron-4b").reduced()
+    params = M.init_params(jax.random.key(0), cfg)
+    tokens = jax.random.randint(jax.random.key(1), (2, 32), 0, cfg.vocab_size)
+    hidden = M.forward(params, cfg, tokens)
+    labels = jnp.roll(tokens, -1, 1)
+    chunked = loss_lib.chunked_lm_loss(params, cfg, hidden, labels,
+                                       num_chunks=8)
+    logits = M.logits_from_hidden(params, cfg, hidden).astype(jnp.float32)
+    full = loss_lib.softmax_xent(logits, labels)
+    np.testing.assert_allclose(chunked, full, atol=1e-5, rtol=1e-5)
+
+
+def test_adam_reduces_quadratic():
+    params = {"w": jnp.array([5.0, -3.0])}
+    opt = opt_lib.adam_init(params)
+    cfg = opt_lib.AdamConfig(lr=0.1)
+    f = lambda p: jnp.sum(p["w"] ** 2)
+    for _ in range(100):
+        g = jax.grad(f)(params)
+        params, opt, _ = opt_lib.adam_update(g, opt, params, cfg)
+    assert float(f(params)) < 1e-2
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": [jnp.ones(4), {"c": jnp.zeros((2, 2), jnp.int32)}]}
+    p = str(tmp_path / "ck.npz")
+    checkpoint.save(p, tree, step=7)
+    like = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    got, step = checkpoint.restore(p, like)
+    assert step == 7
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(got)):
+        np.testing.assert_array_equal(a, b)

@@ -1,0 +1,95 @@
+"""Partitioner contract tests (paper §3.1)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import partition_graph, synthetic_graph
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = synthetic_graph(num_vertices=2000, avg_degree=6, num_classes=4,
+                        feat_dim=8, seed=3)
+    ps = partition_graph(g, 4, seed=1)
+    return g, ps
+
+
+def test_every_vertex_owned_once(setup):
+    g, ps = setup
+    counts = np.zeros(g.num_vertices, np.int64)
+    for p in ps.parts:
+        counts[p.solid_vids] += 1
+    assert (counts == 1).all()
+
+
+def test_train_vertices_balanced(setup):
+    g, ps = setup
+    t = [int(p.train_mask.sum()) for p in ps.parts]
+    cap = int(np.ceil(g.train_mask.sum() / len(ps.parts))) + 1
+    assert max(t) <= cap
+
+
+def test_halo_consistency(setup):
+    """Every cut edge (u,v) makes v a halo in u's partition, with the right
+    owner recorded; halos carry no features (they're not in features[])."""
+    g, ps = setup
+    for p in ps.parts:
+        halo_set = set(p.halo_vids.tolist())
+        for i, v in enumerate(p.solid_vids[:200]):      # spot-check
+            for nb in g.neighbors(v):
+                if ps.owner[nb] != p.part_id:
+                    assert int(nb) in halo_set
+        assert (ps.owner[p.halo_vids] != p.part_id).all()
+        assert (p.halo_owner == ps.owner[p.halo_vids]).all()
+        assert p.features.shape[0] == p.num_solid
+
+
+def test_lut_roundtrip(setup):
+    g, ps = setup
+    for p in ps.parts:
+        v2o = p.vid_p_to_o()
+        # solid VID_p -> VID_o -> local_index round-trips
+        assert (ps.local_index[p.solid_vids] == np.arange(p.num_solid)).all()
+        assert (v2o[:p.num_solid] == p.solid_vids).all()
+
+
+def test_local_edges_preserved(setup):
+    """Local CSR rows reproduce the global neighborhoods exactly."""
+    g, ps = setup
+    p = ps.parts[0]
+    v2o = p.vid_p_to_o()
+    for i in range(0, p.num_solid, 97):
+        row_p = p.indices[p.indptr[i]:p.indptr[i + 1]]
+        got = sorted(v2o[row_p].tolist())
+        want = sorted(g.neighbors(p.solid_vids[i]).tolist())
+        assert got == want
+
+
+def test_db_halo_contract(setup):
+    g, ps = setup
+    for i in range(ps.num_parts):
+        for j in range(ps.num_parts):
+            if i == j:
+                continue
+            db = ps.db_halo(i, j)
+            assert (np.sort(db) == db).all()
+            assert (ps.owner[db] == i).all() if len(db) else True
+            # everything i owns that j sees as halo is in db
+            pj = ps.parts[j]
+            want = np.sort(pj.halo_vids[pj.halo_owner == i])
+            assert (db == want).all()
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(2, 6), st.integers(200, 800))
+def test_property_partition_small_graphs(nparts, V):
+    g = synthetic_graph(num_vertices=V, avg_degree=4, num_classes=3,
+                        feat_dim=4, seed=V)
+    ps = partition_graph(g, nparts, seed=0)
+    counts = np.zeros(V, np.int64)
+    for p in ps.parts:
+        counts[p.solid_vids] += 1
+        # halos disjoint from solids
+        assert not set(p.solid_vids) & set(p.halo_vids)
+    assert (counts == 1).all()
+    assert 0.0 <= ps.edge_cut_frac <= 1.0

@@ -1,0 +1,87 @@
+"""Minibatch sampler invariants."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.graph import partition_graph, synthetic_graph, sample_blocks
+from repro.graph.sampling import epoch_minibatches, layer_capacities
+
+
+@pytest.fixture(scope="module")
+def part():
+    g = synthetic_graph(num_vertices=1500, avg_degree=6, num_classes=4,
+                        feat_dim=8, seed=5)
+    ps = partition_graph(g, 2, seed=0)
+    return ps.parts[0]
+
+
+def test_capacities():
+    caps = layer_capacities(10, (3, 2))
+    # seeds sample fanouts[-1]=2 first: [120, 30, 10]
+    assert caps == [120, 30, 10]
+
+
+def test_block_shapes_and_masks(part):
+    rng = np.random.default_rng(0)
+    seeds = epoch_minibatches(part, 32, rng)[0]
+    mb = sample_blocks(part, seeds, (4, 6), rng, 32)
+    caps = layer_capacities(32, (4, 6))
+    assert [len(n) for n in mb.layer_nodes] == caps
+    for nodes, mask in zip(mb.layer_nodes, mb.node_mask):
+        assert ((nodes >= 0) == mask).all()
+    assert mb.nbr_idx[0].shape == (caps[1], 4)
+    assert mb.nbr_idx[1].shape == (caps[2], 6)
+
+
+def test_dst_prefix_property(part):
+    """Layer k+1 nodes are a prefix of layer k nodes (self-feature access)."""
+    rng = np.random.default_rng(1)
+    seeds = epoch_minibatches(part, 16, rng)[0]
+    mb = sample_blocks(part, seeds, (3, 3), rng, 16)
+    for k in range(len(mb.nbr_idx)):
+        coarse, fine = mb.layer_nodes[k + 1], mb.layer_nodes[k]
+        assert (fine[:len(coarse)] == coarse).all()
+
+
+def test_sampled_edges_exist(part):
+    rng = np.random.default_rng(2)
+    seeds = epoch_minibatches(part, 16, rng)[0]
+    mb = sample_blocks(part, seeds, (3, 3), rng, 16)
+    for k in range(len(mb.nbr_idx)):
+        fine = mb.layer_nodes[k]
+        dsts = mb.layer_nodes[k + 1]
+        for r in range(len(dsts)):
+            v = dsts[r]
+            if v < 0 or v >= part.num_solid:
+                continue
+            row = set(part.indices[part.indptr[v]:part.indptr[v + 1]].tolist())
+            for j in mb.nbr_idx[k][r]:
+                if j >= 0:
+                    assert int(fine[j]) in row
+
+
+def test_fanout_bound(part):
+    rng = np.random.default_rng(3)
+    seeds = epoch_minibatches(part, 16, rng)[0]
+    mb = sample_blocks(part, seeds, (2, 5), rng, 16)
+    assert (mb.nbr_idx[0] >= 0).sum(1).max() <= 2
+    assert (mb.nbr_idx[1] >= 0).sum(1).max() <= 5
+
+
+def test_halos_never_expanded(part):
+    rng = np.random.default_rng(4)
+    seeds = epoch_minibatches(part, 16, rng)[0]
+    mb = sample_blocks(part, seeds, (3, 3), rng, 16)
+    for k in range(len(mb.nbr_idx)):
+        dsts = mb.layer_nodes[k + 1]
+        halo_dst = (dsts >= part.num_solid) & (dsts >= 0)
+        # halo dst rows have no sampled neighbors
+        assert (mb.nbr_idx[k][halo_dst] < 0).all()
+
+
+def test_epoch_covers_all_train(part):
+    rng = np.random.default_rng(5)
+    batches = epoch_minibatches(part, 32, rng)
+    got = np.sort(np.concatenate(batches))
+    want = np.sort(np.flatnonzero(part.train_mask))
+    assert (got == want).all()

@@ -1,0 +1,77 @@
+"""Batched serving scheduler tests: slot reuse, per-slot positions, and
+consistency with unbatched sequential decoding."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.models.transformer import model as M
+from repro.serve.scheduler import BatchScheduler, Request, serve_requests
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_arch("minitron-4b").reduced()
+    params = M.init_params(jax.random.key(0), cfg)
+    return cfg, params
+
+
+def _sequential_decode(cfg, params, prompt, n):
+    cache = M.init_cache(cfg, 1, 32)
+    tok = jnp.asarray([[prompt[0]]], jnp.int32)
+    pos = 0
+    for p in prompt[1:]:
+        _, cache = M.decode_step(params, cfg, cache, tok, jnp.int32(pos))
+        tok = jnp.asarray([[p]], jnp.int32)
+        pos += 1
+    out = []
+    for _ in range(n):
+        logits, cache = M.decode_step(params, cfg, cache, tok, jnp.int32(pos))
+        tok = jnp.argmax(logits[:, -1, :], -1)[:, None].astype(jnp.int32)
+        out.append(int(tok[0, 0]))
+        pos += 1
+    return out
+
+
+def test_scheduler_matches_sequential(setup):
+    cfg, params = setup
+    prompt = [3, 7, 11]
+    want = _sequential_decode(cfg, params, prompt, 4)
+    reqs = [Request(rid=0, prompt=list(prompt), max_tokens=4)]
+    reqs, _ = serve_requests(cfg, params, reqs, num_slots=2, cache_len=32)
+    assert reqs[0].generated == want
+
+
+def test_more_requests_than_slots(setup):
+    cfg, params = setup
+    reqs = [Request(rid=i, prompt=[i + 1, i + 2], max_tokens=3)
+            for i in range(5)]
+    reqs, steps = serve_requests(cfg, params, reqs, num_slots=2,
+                                 cache_len=16)
+    assert all(r.done for r in reqs)
+    assert all(len(r.generated) == 3 for r in reqs)
+    assert steps >= 3 * 3  # at least ceil(5/2)=3 waves of (1 prompt + 3 gen)
+
+
+def test_slot_reuse_is_isolated(setup):
+    """A request decoded after slot reuse == the same request decoded fresh
+    (no state leakage across slot occupants)."""
+    cfg, params = setup
+    a = [Request(rid=0, prompt=[5, 9], max_tokens=3)]
+    a, _ = serve_requests(cfg, params, a, num_slots=1, cache_len=16)
+    pair = [Request(rid=1, prompt=[2, 4], max_tokens=3),
+            Request(rid=2, prompt=[5, 9], max_tokens=3)]
+    pair, _ = serve_requests(cfg, params, pair, num_slots=1, cache_len=16)
+    assert pair[1].generated == a[0].generated
+
+
+def test_eos_frees_slot(setup):
+    cfg, params = setup
+    # find what the model emits first, use it as eos: request ends at len 1
+    probe = [Request(rid=0, prompt=[1, 2], max_tokens=5)]
+    probe, _ = serve_requests(cfg, params, probe, num_slots=1, cache_len=16)
+    eos = probe[0].generated[0]
+    r = [Request(rid=1, prompt=[1, 2], max_tokens=5, eos_id=eos)]
+    r, _ = serve_requests(cfg, params, r, num_slots=1, cache_len=16)
+    assert r[0].done and r[0].generated == [eos]
