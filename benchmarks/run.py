@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV lines.
   fig5   bench_distdgl      DistGNN-MB vs DistDGL-like baseline (Fig. 5)
   hec    bench_hec          HEC hit-rates (paper §4.4)
   table3 bench_convergence  convergence parity (Table 3 / §4.5)
+  pipeline bench_pipeline   vectorized sampler + async prefetch (§3.3/§3.4)
   roofline                   dry-run roofline table (deliverable g)
 """
 from __future__ import annotations
@@ -18,13 +19,15 @@ import traceback
 def main() -> None:
     only = sys.argv[1] if len(sys.argv) > 1 else None
     from benchmarks import (bench_convergence, bench_distdgl, bench_hec,
-                            bench_scaling, bench_update, roofline)
+                            bench_pipeline, bench_scaling, bench_update,
+                            roofline)
     suites = {
         "fig2_update": bench_update.main,
         "fig3_fig4_scaling": bench_scaling.main,
         "fig5_distdgl": bench_distdgl.main,
         "hec_hitrates": bench_hec.main,
         "table3_convergence": bench_convergence.main,
+        "pipeline": bench_pipeline.main,
         "roofline": roofline.main,
     }
     print("name,us_per_call,derived")

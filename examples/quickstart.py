@@ -37,7 +37,9 @@ def main():
                           num_ranks=RANKS, mode="aep")
     state = trainer.init_state(jax.random.key(0))
 
-    # 4. train + evaluate
+    # 4. train + evaluate — minibatches flow through the async pipeline
+    # (repro.pipeline: vectorized sampler + prefetch + staged transfers;
+    # cfg.pipeline tunes it, pipeline=None falls back to synchronous)
     state, hist = trainer.train_epochs(ps, dd, state, num_epochs=5,
                                        log_every=1)
     acc = trainer.evaluate(ps, dd, state)

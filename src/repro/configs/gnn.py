@@ -28,6 +28,37 @@ class HECConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    """Asynchronous minibatch pipeline (repro.pipeline) parameters.
+
+    The paper's §3.3 sampler is synchronous thread-parallel; our analogue
+    vectorizes the CSR fanout draw and overlaps minibatch preparation with
+    the device step (DistDGL/MassiveGNN-style prefetching).  Results are
+    bit-identical for any ``num_workers`` — each step owns an RNG stream —
+    so worker count is purely a throughput knob.
+
+    Defaults are deliberately conservative (one worker, one batch ahead):
+    on an accelerator that fully hides sampling behind the device step,
+    while on a host-only CPU backend — where sampling threads and XLA
+    compute share cores — it stays neutral.  Raise ``num_workers`` /
+    ``prefetch_depth`` when the device step is long relative to sampling.
+    """
+    enabled: bool = True            # default training path uses the pipeline
+    num_workers: int = 1            # 0 = synchronous inline sampling
+    prefetch_depth: int = 1         # minibatches sampled ahead of the step
+    double_buffer: bool = True      # overlap device_put(k+1) with step k
+    vectorized: bool = True         # vectorized CSR sampler (vs reference)
+
+    def __post_init__(self):
+        if self.num_workers < 0:
+            raise ValueError(f"num_workers must be >= 0 "
+                             f"(0 = synchronous), got {self.num_workers}")
+        if self.prefetch_depth < 1:
+            raise ValueError(
+                f"prefetch_depth must be >= 1, got {self.prefetch_depth}")
+
+
+@dataclasses.dataclass(frozen=True)
 class GNNConfig:
     name: str
     model: str                       # "graphsage" | "gat"
@@ -42,6 +73,8 @@ class GNNConfig:
     feat_dim: int = 128
     num_classes: int = 172
     hec: HECConfig = dataclasses.field(default_factory=HECConfig)
+    pipeline: PipelineConfig = dataclasses.field(
+        default_factory=PipelineConfig)
 
     @property
     def num_layers(self) -> int:

@@ -123,3 +123,14 @@ def epoch_minibatches(part: Partition, batch_size: int,
     rng.shuffle(train)
     return [train[i:i + batch_size]
             for i in range(0, len(train), batch_size)]
+
+
+def pad_schedule(per_rank: List[List[np.ndarray]]) -> List[List[np.ndarray]]:
+    """``schedule[step][rank]`` from per-rank batch lists, padded with empty
+    seed arrays: every rank takes the same number of synchronized steps and
+    no seed is ever trained twice (short ranks contribute fully masked
+    batches instead of wrapping around)."""
+    steps = max((len(b) for b in per_rank), default=0)
+    empty = np.empty(0, np.int64)
+    return [[b[k] if k < len(b) else empty for b in per_rank]
+            for k in range(steps)]

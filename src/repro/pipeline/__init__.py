@@ -1,0 +1,17 @@
+"""Asynchronous minibatch pipeline (sampler -> prefetch -> staging).
+
+Layers:
+  vectorized_sampler  fully vectorized numpy CSR neighbor sampler
+                      (same MinibatchBlocks contract as graph.sampling)
+  prefetcher          deterministic sampling plan + bounded thread-pool
+                      prefetch (bit-identical for any worker count)
+  staging             double-buffered host->device transfer and the
+                      MinibatchPipeline iterator consumed by DistTrainer
+"""
+from repro.pipeline.prefetcher import SamplingPlan, prefetch
+from repro.pipeline.staging import MinibatchPipeline, device_stage
+from repro.pipeline.vectorized_sampler import (sample_blocks_vectorized,
+                                               stack_ranks)
+
+__all__ = ["SamplingPlan", "prefetch", "MinibatchPipeline", "device_stage",
+           "sample_blocks_vectorized", "stack_ranks"]

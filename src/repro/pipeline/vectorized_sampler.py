@@ -1,0 +1,162 @@
+"""Fully vectorized CSR neighbor sampler (paper §3.3, hot-path rewrite).
+
+``repro.graph.sampling.sample_blocks`` walks every destination row in a
+Python loop and relabels through a dict ``pos_map`` — fine for correctness
+pinning, but host sampling then dominates wall-clock and serializes against
+the device step.  This module produces the *same* fixed-shape
+``MinibatchBlocks`` contract with no per-row Python loops:
+
+  * fanout draw: one uniform key matrix ``[n_dst, max_deg]`` per layer;
+    the ``f`` smallest keys of a row are a uniform sample without
+    replacement from that row's neighbors (rows with ``deg <= f`` keep all
+    neighbors in CSR order, matching the reference sampler).
+  * relabeling: ``np.unique``/``np.setdiff1d`` for the new-leaf set and an
+    ``argsort`` + ``searchsorted`` lookup instead of a Python dict.
+
+All reference-sampler invariants are preserved (and pinned by
+``tests/test_pipeline.py``): layer sizes equal ``layer_capacities``, dst
+nodes are a prefix of the finer layer, halos appear only as leaves, every
+sampled edge exists in the partition CSR, and at most ``fanouts[k]``
+neighbors are drawn per row.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+import numpy as np
+
+from repro.graph.partition import Partition
+from repro.graph.sampling import MinibatchBlocks, layer_capacities
+
+
+def _draw_neighbors(indptr: np.ndarray, indices: np.ndarray, cur: np.ndarray,
+                    num_solid: int, f: int,
+                    rng: np.random.Generator) -> np.ndarray:
+    """Sampled neighbor VIDs ``[len(cur), f]`` (-1 pad), no Python loops."""
+    n_dst = len(cur)
+    out = np.full((n_dst, f), -1, np.int64)
+    valid = (cur >= 0) & (cur < num_solid)        # halos are never expanded
+    vc = np.where(valid, cur, 0)
+    deg = np.where(valid, indptr[vc + 1] - indptr[vc], 0)
+    # compact to rows that actually sample: wide layers are mostly padding
+    act = np.flatnonzero(deg > 0)
+    if f <= 0 or len(act) == 0:
+        return out
+    deg = deg[act]
+    starts = indptr[vc[act]]
+
+    # deg <= f rows keep every neighbor (CSR order, left-packed) — no RNG
+    small = deg <= f
+    if small.any():
+        ds, ss = deg[small], starts[small]
+        w = int(ds.max())
+        col = np.arange(w)
+        in_row = col[None, :] < ds[:, None]
+        gi = np.minimum(ss[:, None] + col[None, :], len(indices) - 1)
+        out[act[small], :w] = np.where(in_row, indices[gi], -1)
+
+    # deg > f rows: f smallest of iid uniform keys == uniform sample w/o
+    # replacement; all f picks are in-row so no masking/packing needed.
+    # Rows are processed in degree-sorted chunks so a few hub vertices don't
+    # widen the key matrix (and the argpartition) for every row.
+    big = ~small
+    if big.any():
+        rows, db, sb = act[big], deg[big], starts[big]
+        order = np.argsort(db, kind="stable")
+        for ch in np.array_split(order, min(8, len(order))):
+            if not len(ch):
+                continue
+            d_ch = db[ch]
+            w = int(d_ch.max())
+            keys = rng.random((len(ch), w), dtype=np.float32)
+            keys[np.arange(w)[None, :] >= d_ch[:, None]] = np.inf
+            sel = np.argpartition(keys, f - 1, axis=1)[:, :f]
+            out[rows[ch]] = indices[sb[ch][:, None] + sel]
+    return out
+
+
+def sample_blocks_vectorized(part: Partition, seeds_p: np.ndarray,
+                             fanouts: Sequence[int],
+                             rng: np.random.Generator,
+                             batch_size: int) -> MinibatchBlocks:
+    """Drop-in replacement for ``sample_blocks`` (same contract, >5x faster).
+
+    The RNG consumption pattern differs from the reference sampler, so
+    individual draws are not bit-identical — the sampling *distribution* is
+    (uniform without replacement per row; full row when ``deg <= fanout``).
+    """
+    fanouts = list(fanouts)
+    L = len(fanouts)
+    caps = layer_capacities(batch_size, fanouts)
+    S = part.num_solid
+
+    seeds = np.full(batch_size, -1, np.int64)
+    seeds[:len(seeds_p)] = seeds_p
+    seed_mask = seeds >= 0
+    labels = np.zeros(batch_size, np.int64)
+    labels[seed_mask] = part.labels[seeds[seed_mask]]
+
+    layer_nodes: List[np.ndarray] = [None] * (L + 1)
+    node_mask: List[np.ndarray] = [None] * (L + 1)
+    nbr_idx: List[np.ndarray] = [None] * L
+    layer_nodes[L] = seeds
+    node_mask[L] = seed_mask
+
+    cur = seeds
+    for k in range(L - 1, -1, -1):              # seeds toward inputs
+        f = fanouts[k]
+        n_dst = len(cur)
+        nbrs = _draw_neighbors(part.indptr, part.indices, cur, S, f, rng)
+
+        # finer node list: dst prefix + sorted unique new neighbors
+        flat = nbrs.ravel()
+        nz = flat >= 0
+        uniq = np.unique(flat[nz])
+        cur_valid = cur[cur >= 0]
+        extra = np.setdiff1d(uniq, cur_valid, assume_unique=True)
+        cap = caps[k]
+        n_fine = n_dst + len(extra)
+        assert n_fine <= cap, (n_fine, cap)
+        fine = np.full(cap, -1, np.int64)
+        fine[:n_dst] = cur
+        fine[n_dst:n_fine] = extra
+
+        # VID_p -> position in `fine` via a direct lookup table (uninit'd is
+        # fine: only positions of present VIDs are ever read back)
+        vmask = fine >= 0
+        fpos = np.flatnonzero(vmask)
+        pos_of = np.empty(S + part.num_halo, np.int64)
+        pos_of[fine[vmask]] = fpos
+        positions = np.full(flat.shape, -1, np.int64)
+        if nz.any():
+            positions[nz] = pos_of[flat[nz]]
+
+        nbr_idx[k] = positions.reshape(n_dst, f)
+        layer_nodes[k] = fine
+        node_mask[k] = vmask
+        cur = fine
+
+    return MinibatchBlocks(layer_nodes=layer_nodes, node_mask=node_mask,
+                           nbr_idx=nbr_idx, seeds=seeds, seed_mask=seed_mask,
+                           labels=labels)
+
+
+def stack_ranks(mbs: Sequence[MinibatchBlocks]) -> Dict:
+    """Stack per-rank blocks into the host-side [R, ...] minibatch layout.
+
+    Same structure/dtypes as ``repro.train.gnn_trainer.sample_step`` but kept
+    as numpy so prefetch workers never touch jax; ``staging`` owns the
+    host->device transfer.
+    """
+    L = mbs[0].num_layers
+    return {
+        "seeds": np.stack([m.seeds for m in mbs]).astype(np.int32),
+        "seed_mask": np.stack([m.seed_mask for m in mbs]),
+        "labels": np.stack([m.labels for m in mbs]).astype(np.int32),
+        "nbr_idx": [np.stack([m.nbr_idx[k] for m in mbs]).astype(np.int32)
+                    for k in range(L)],
+        "layer_nodes": [np.stack([m.layer_nodes[k] for m in mbs])
+                        .astype(np.int32) for k in range(L + 1)],
+        "node_mask": [np.stack([m.node_mask[k] for m in mbs])
+                      for k in range(L + 1)],
+    }

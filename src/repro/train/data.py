@@ -101,17 +101,17 @@ def shard_batch(batch: dict, mesh, batch_axes: Optional[dict] = None):
 
 def gnn_epoch_iterator(ps, cfg, rng: np.random.Generator):
     """Synchronized per-rank minibatches for one epoch (paper Alg. 2 line 4:
-    CreateMinibatches). Ranks with fewer batches wrap (load imbalance is
-    reported, not hidden — paper §4.4)."""
-    from repro.graph.sampling import epoch_minibatches
+    CreateMinibatches). Ranks with fewer batches contribute empty (fully
+    masked) batches — no seed is trained twice; the load imbalance is
+    reported, not hidden (paper §4.4)."""
+    from repro.graph.sampling import epoch_minibatches, pad_schedule
     from repro.train.gnn_trainer import sample_step
 
     per_rank = [epoch_minibatches(ps.parts[r], cfg.batch_size, rng)
                 for r in range(ps.num_parts)]
-    M = max(len(b) for b in per_rank)
+    schedule = pad_schedule(per_rank)
+    M = len(schedule)
     imbalance = (M - min(len(b) for b in per_rank)) / max(M, 1)
-    for k in range(M):
-        seeds = [per_rank[r][k % len(per_rank[r])]
-                 for r in range(ps.num_parts)]
+    for seeds in schedule:
         yield sample_step(ps, cfg, seeds, rng), {"imbalance": imbalance,
                                                  "minibatches": M}

@@ -16,6 +16,11 @@ Modes:
   sync — DistDGL-like baseline: fresh layer-0 halo features fetched with a
          blocking request/response all_to_all pair every iteration
   drop — LLCG-like: cut edges ignored (halos invalid everywhere)
+
+Minibatches flow through ``repro.pipeline`` by default (vectorized CSR
+sampler -> background prefetch -> double-buffered staging, paper §3.3/§3.4
+overlap); ``train_epochs(..., pipeline=None)`` selects the legacy
+synchronous reference path.
 """
 from __future__ import annotations
 
@@ -30,10 +35,13 @@ from jax.sharding import PartitionSpec as P
 from repro.configs.gnn import GNNConfig
 from repro.core import hec as hec_lib
 from repro.graph.partition import PartitionSet
-from repro.graph.sampling import epoch_minibatches, sample_blocks
+from repro.graph.sampling import sample_blocks
+from repro.pipeline.staging import MinibatchPipeline
+from repro.pipeline.vectorized_sampler import stack_ranks
 from repro.models.gnn import gat as gat_lib
 from repro.models.gnn import graphsage as sage_lib
 from repro.train import optimizer as opt_lib
+from repro.utils import compat
 
 _SENTINEL = np.int32(2 ** 30)    # sorts after every real VID_o
 
@@ -74,22 +82,34 @@ def build_dist_data(ps: PartitionSet, cfg: GNNConfig) -> dict:
 
 
 def sample_step(ps: PartitionSet, cfg: GNNConfig, seed_lists, rng) -> dict:
-    """Sample one synchronized minibatch per rank -> stacked device arrays."""
+    """Sample one synchronized minibatch per rank -> stacked device arrays.
+
+    Legacy synchronous path (reference sampler); the batch layout contract
+    is owned by ``repro.pipeline.vectorized_sampler.stack_ranks``.
+    """
     R = ps.num_parts
     mbs = [sample_blocks(ps.parts[r], seed_lists[r], cfg.fanouts, rng,
                          cfg.batch_size) for r in range(R)]
-    L = mbs[0].num_layers
-    return {
-        "seeds": jnp.asarray(np.stack([m.seeds for m in mbs]).astype(np.int32)),
-        "seed_mask": jnp.asarray(np.stack([m.seed_mask for m in mbs])),
-        "labels": jnp.asarray(np.stack([m.labels for m in mbs]).astype(np.int32)),
-        "nbr_idx": [jnp.asarray(np.stack([m.nbr_idx[k] for m in mbs])
-                                .astype(np.int32)) for k in range(L)],
-        "layer_nodes": [jnp.asarray(np.stack([m.layer_nodes[k] for m in mbs])
-                                    .astype(np.int32)) for k in range(L + 1)],
-        "node_mask": [jnp.asarray(np.stack([m.node_mask[k] for m in mbs]))
-                      for k in range(L + 1)],
-    }
+    return jax.tree_util.tree_map(jnp.asarray, stack_ranks(mbs))
+
+
+def _epoch_mean(ep_metrics):
+    """Aggregate per-step metrics: loss/acc weighted by real example count
+    (padded empty batches contribute zero weight), counters plain-averaged."""
+    if not ep_metrics:                   # zero-step epoch: no train seeds
+        return {"examples": 0.0, "loss": 0.0, "acc": 0.0}
+    w = np.array([m.get("examples", 1.0) for m in ep_metrics], np.float64)
+    total = w.sum()
+    out = {}
+    for key in ep_metrics[0]:
+        vals = np.array([m[key] for m in ep_metrics], np.float64)
+        if key in ("loss", "acc"):
+            out[key] = float((vals * w).sum() / max(total, 1.0))
+        elif key == "examples":
+            out[key] = float(total)
+        else:
+            out[key] = float(vals.mean())
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -244,16 +264,25 @@ class DistTrainer:
             logz = jax.scipy.special.logsumexp(logits, -1)
             gold = jnp.take_along_axis(logits, labels[:, None], -1)[:, 0]
             nll = (logz - gold) * lmask
-            loss = nll.sum() / jnp.maximum(lmask.sum(), 1)
-            acc = (((jnp.argmax(logits, -1) == labels) & lmask).sum()
-                   / jnp.maximum(lmask.sum(), 1))
-            return loss, (acc, captured, hits)
+            n_valid = lmask.sum()
+            loss = nll.sum() / jnp.maximum(n_valid, 1)
+            correct = ((jnp.argmax(logits, -1) == labels) & lmask).sum()
+            return loss, (nll.sum(), correct, n_valid, captured, hits)
 
-        (loss, (acc, captured, hits)), grads = jax.value_and_grad(
-            loss_fn, has_aux=True)(params)
-        grads = jax.lax.pmean(grads, "data")
-        loss_m = jax.lax.pmean(loss, "data")
-        acc_m = jax.lax.pmean(acc, "data")
+        (loss, (nll_sum, correct, n_valid, captured, hits)), grads = \
+            jax.value_and_grad(loss_fn, has_aux=True)(params)
+        # gradients and metrics are example-weighted across ranks, so ranks
+        # padded with an empty seed batch (epoch-length imbalance) neither
+        # dilute the update toward zero nor skew the numbers: the all-reduce
+        # yields the gradient of the *global* batch mean
+        examples = jax.lax.psum(n_valid, "data")
+        denom = jnp.maximum(examples, 1)
+        weight = n_valid.astype(jnp.float32)
+        denom_f = jnp.maximum(examples.astype(jnp.float32), 1.0)
+        grads = jax.tree_util.tree_map(
+            lambda g: jax.lax.psum(g * weight, "data") / denom_f, grads)
+        loss_m = jax.lax.psum(nll_sum, "data") / denom
+        acc_m = jax.lax.psum(correct, "data") / denom
 
         # (3) AEP push (paper lines 14-24) + all_to_all
         if self.mode == "aep":
@@ -265,7 +294,7 @@ class DistTrainer:
             grads, opt_state, params,
             opt_lib.AdamConfig(lr=cfg.lr, grad_clip=1.0))
 
-        metrics = {"loss": loss_m, "acc": acc_m,
+        metrics = {"loss": loss_m, "acc": acc_m, "examples": examples,
                    "grad_norm": diag["grad_norm"]}
         for l, (h_cnt, t_cnt) in enumerate(hits):
             metrics[f"hec_hits_l{l}"] = jax.lax.psum(h_cnt, "data")
@@ -362,6 +391,15 @@ class DistTrainer:
         return h0, got & is_halo0
 
     # -- public API ----------------------------------------------------------
+    def _resolve_pipeline(self, ps, seed0, pipeline):
+        """"auto" -> MinibatchPipeline iff cfg.pipeline.enabled; else as-is."""
+        if pipeline != "auto":
+            return pipeline
+        if not self.cfg.pipeline.enabled:
+            return None
+        return MinibatchPipeline(ps, self.cfg, base_seed=seed0,
+                                 mesh=self.mesh)
+
     def make_step(self, dist_data=None, donate=True):
         cfg = self.cfg
         shard = P("data")
@@ -371,38 +409,49 @@ class DistTrainer:
             return self._rank_step(params, opt_state, hec, inflight, data,
                                    mb, seed)
 
-        smapped = jax.shard_map(
+        smapped = compat.shard_map(
             stepf, mesh=self.mesh,
             in_specs=(repl, repl, [shard] * cfg.num_layers, shard, shard,
                       shard, repl),
-            out_specs=(repl, repl, [shard] * cfg.num_layers, shard, repl),
-            check_vma=False)
+            out_specs=(repl, repl, [shard] * cfg.num_layers, shard, repl))
         return jax.jit(smapped, donate_argnums=(1, 2, 3) if donate else ())
 
     def train_epochs(self, ps, dist_data, state, num_epochs, seed0=0,
-                     step_fn=None, log_every=0):
+                     step_fn=None, log_every=0, pipeline="auto"):
+        """Train for ``num_epochs``.
+
+        ``pipeline`` selects the minibatch source:
+          "auto"              — a ``MinibatchPipeline`` when the config's
+                                ``cfg.pipeline.enabled`` (the default path:
+                                vectorized sampler + background prefetch +
+                                double-buffered staging), else synchronous;
+          a MinibatchPipeline — used as given;
+          None                — legacy synchronous per-step sampling
+                                (reference ``sample_blocks``, no overlap).
+        Ranks with fewer minibatches than the epoch maximum contribute empty
+        (fully masked) batches; metrics count only real examples.
+        """
         cfg = self.cfg
+        pipeline = self._resolve_pipeline(ps, seed0, pipeline)
         rng = np.random.default_rng(seed0)
         step_fn = step_fn or self.make_step(dist_data)
-        R = self.num_ranks
         history = []
         step_idx = int(state["step"])
         for ep in range(num_epochs):
-            per_rank = [epoch_minibatches(ps.parts[r], cfg.batch_size, rng)
-                        for r in range(R)]
-            M = max(len(b) for b in per_rank)
+            if pipeline is not None:
+                mb_iter = pipeline.epoch_batches(ep)
+            else:
+                from repro.train.data import gnn_epoch_iterator
+                mb_iter = (mb for mb, _ in gnn_epoch_iterator(ps, cfg, rng))
             ep_metrics = []
-            for k in range(M):
-                seeds = [per_rank[r][k % len(per_rank[r])] for r in range(R)]
-                mb = sample_step(ps, cfg, seeds, rng)
+            for mb in mb_iter:
                 (state["params"], state["opt_state"], state["hec"],
                  state["inflight"], metrics) = step_fn(
                     state["params"], state["opt_state"], state["hec"],
                     state["inflight"], dist_data, mb, jnp.uint32(step_idx))
                 ep_metrics.append({k_: float(v) for k_, v in metrics.items()})
                 step_idx += 1
-            mean = {k_: float(np.mean([m[k_] for m in ep_metrics]))
-                    for k_ in ep_metrics[0]}
+            mean = _epoch_mean(ep_metrics)
             history.append(mean)
             if log_every:
                 hl = [f"l{l}:{mean.get(f'hec_hits_l{l}', 0)/max(mean.get(f'hec_halos_l{l}',1),1):.2f}"
@@ -414,7 +463,7 @@ class DistTrainer:
         return state, history
 
     def evaluate(self, ps, dist_data, state, num_batches=8, seed0=123,
-                 step_fn=None):
+                 step_fn=None, pipeline="auto"):
         """Test accuracy via sampled minibatches over test vertices."""
         cfg = self.cfg
         rng = np.random.default_rng(seed0)
@@ -423,16 +472,26 @@ class DistTrainer:
             ecfg = dataclasses.replace(cfg, dropout=0.0)
             step_fn = dataclasses.replace(self, cfg=ecfg).make_step(
                 donate=False)
-        accs = []
-        for k in range(num_batches):
-            seeds = []
-            for r in range(R):
-                test = np.flatnonzero(ps.parts[r].test_mask)
-                rng.shuffle(test)
-                seeds.append(test[:cfg.batch_size])
-            mb = sample_step(ps, cfg, seeds, rng)
+        pipeline = self._resolve_pipeline(ps, seed0, pipeline)
+        if pipeline is not None:
+            mb_iter = pipeline.eval_batches(num_batches, seed=seed0)
+        else:
+            def _legacy():
+                for _ in range(num_batches):
+                    seeds = []
+                    for r in range(R):
+                        test = np.flatnonzero(ps.parts[r].test_mask)
+                        rng.shuffle(test)
+                        seeds.append(test[:cfg.batch_size])
+                    yield sample_step(ps, cfg, seeds, rng)
+            mb_iter = _legacy()
+        accs, weights = [], []
+        for k, mb in enumerate(mb_iter):
             (_, _, _, _, metrics) = step_fn(
                 state["params"], state["opt_state"], state["hec"],
                 state["inflight"], dist_data, mb, jnp.uint32(10_000 + k))
             accs.append(float(metrics["acc"]))
-        return float(np.mean(accs))
+            weights.append(float(metrics["examples"]))
+        if not sum(weights):
+            return 0.0
+        return float(np.average(accs, weights=weights))

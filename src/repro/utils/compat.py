@@ -1,0 +1,28 @@
+"""Version-compatibility shims for jax APIs used across the repo.
+
+jax moved ``shard_map`` from ``jax.experimental.shard_map`` to the top-level
+namespace (and renamed ``check_rep`` to ``check_vma``) across 0.4.x/0.5.x.
+The trainer targets whichever spelling the installed jax provides.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """Return ``f`` shard_mapped over ``mesh`` with replication checks off."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        try:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_vma=False)
+        except TypeError:
+            pass
+        try:   # rename window: top-level shard_map still spelling check_rep
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
+        except TypeError:
+            return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)
