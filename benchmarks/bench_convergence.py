@@ -16,6 +16,8 @@ from benchmarks.common import emit
 _SCRIPT = r"""
 import os, sys, json
 R = int(sys.argv[1])
+EP = int(sys.argv[2]) if len(sys.argv) > 2 else 10
+V = int(sys.argv[3]) if len(sys.argv) > 3 else 6000
 os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={R}"
 import jax, numpy as np
 from repro.configs.gnn import small_gnn_config
@@ -23,7 +25,7 @@ from repro.graph import partition_graph, synthetic_graph
 from repro.launch.mesh import make_gnn_mesh
 from repro.train.gnn_trainer import DistTrainer, build_dist_data
 
-g = synthetic_graph(num_vertices=6000, avg_degree=8, num_classes=6,
+g = synthetic_graph(num_vertices=V, avg_degree=8, num_classes=6,
                     feat_dim=32, seed=0)
 ps = partition_graph(g, R, seed=0)
 cfg = small_gnn_config("graphsage", batch_size=64, feat_dim=32, num_classes=6)
@@ -32,25 +34,31 @@ tr = DistTrainer(cfg=cfg, mesh=make_gnn_mesh(R), num_ranks=R, mode="aep")
 state = tr.init_state(jax.random.key(0))
 step = tr.make_step()
 accs = []
-for ep in range(10):
+for ep in range(EP):
     state, hist = tr.train_epochs(ps, dd, state, 1, step_fn=step)
     accs.append(tr.evaluate(ps, dd, state, num_batches=4))
 print("RESULT" + json.dumps({"accs": accs}))
 """
 
 
-def run(r):
+def run(r, epochs=10, vertices=6000):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.abspath(
         os.path.join(os.path.dirname(__file__), "..", "src"))
-    p = subprocess.run([sys.executable, "-c", _SCRIPT, str(r)],
-                       env=env, capture_output=True, text=True, timeout=1800)
+    p = subprocess.run(
+        [sys.executable, "-c", _SCRIPT, str(r), str(epochs), str(vertices)],
+        env=env, capture_output=True, text=True, timeout=1800)
     assert p.returncode == 0, p.stderr[-2000:]
     line = [l for l in p.stdout.splitlines() if l.startswith("RESULT")][-1]
     return json.loads(line[len("RESULT"):])
 
 
-def main():
+def main(smoke=False):
+    if smoke:
+        accs = run(1, epochs=2, vertices=1500)["accs"]
+        emit("table3_convergence_smoke", 0.0,
+             f"best_acc={max(accs):.3f};epochs={len(accs)}")
+        return
     single = run(1)["accs"]
     target = max(single)
     dist = run(4)["accs"]

@@ -17,6 +17,7 @@ from benchmarks.common import emit
 _SCRIPT = r"""
 import os, sys, json, time
 R = int(sys.argv[1]); mode = sys.argv[2]
+V = int(sys.argv[3]) if len(sys.argv) > 3 else 6000
 os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={R}"
 import jax, numpy as np
 from repro.configs.gnn import small_gnn_config
@@ -25,7 +26,7 @@ from repro.graph import partition_graph, synthetic_graph
 from repro.launch.mesh import make_gnn_mesh
 from repro.train.gnn_trainer import DistTrainer, build_dist_data, layer_dims
 
-g = synthetic_graph(num_vertices=6000, avg_degree=8, num_classes=6,
+g = synthetic_graph(num_vertices=V, avg_degree=8, num_classes=6,
                     feat_dim=32, seed=0)
 ps = partition_graph(g, R, seed=0)
 cfg = small_gnn_config("graphsage", batch_size=64, feat_dim=32, num_classes=6)
@@ -47,21 +48,25 @@ print("RESULT" + json.dumps({"epoch_s": dt, "acc": acc, "comm": comm}))
 """
 
 
-def run(r, mode):
+def run(r, mode, vertices=6000):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.abspath(
         os.path.join(os.path.dirname(__file__), "..", "src"))
-    p = subprocess.run([sys.executable, "-c", _SCRIPT, str(r), mode],
-                       env=env, capture_output=True, text=True, timeout=1200)
+    p = subprocess.run(
+        [sys.executable, "-c", _SCRIPT, str(r), mode, str(vertices)],
+        env=env, capture_output=True, text=True, timeout=1200)
     assert p.returncode == 0, p.stderr[-2000:]
     line = [l for l in p.stdout.splitlines() if l.startswith("RESULT")][-1]
     return json.loads(line[len("RESULT"):])
 
 
-def main(r=4):
+def main(r=4, smoke=False):
     from repro.core.aep import (aep_bytes_per_step, epoch_time_model,
                                 sync_bytes_per_step)
-    res = {m: run(r, m) for m in ("aep", "sync")}
+    vertices = 6000
+    if smoke:
+        r, vertices = 2, 1500
+    res = {m: run(r, m, vertices) for m in ("aep", "sync")}
     per_step_compute = 2e-3
     m_aep = epoch_time_model(r, 10, per_step_compute, res["aep"]["comm"],
                              overlap=True)

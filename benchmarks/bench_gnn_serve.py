@@ -1,0 +1,122 @@
+"""GNN inference serving benchmark (serve/gnn subsystem).
+
+Three measurements on the synthetic power-law graph:
+
+  * **offline exactness**: layer-wise chunked inference must match the
+    direct full-graph forward within fp32 tolerance (the serving cache is
+    pre-warmed from these embeddings, so their exactness is load-bearing),
+  * **cold vs pre-warmed throughput**: the same query workload (>= 50%
+    neighborhood overlap via repeated queries) served from an empty cache
+    vs a cache pre-warmed by the offline engine.  Acceptance bar:
+    pre-warmed >= 2x cold,
+  * **cache-hit-rate sweep**: hit rates + throughput as the workload's
+    repeat fraction grows (cache value scales with neighborhood overlap).
+
+Emits ``name,us_per_call,derived`` CSV rows plus one ``RESULT{...}`` JSON
+line.  Compilation is excluded from every timing (a warmup workload runs
+first; ``update_params`` then clears the cache without recompiling).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def make_workload(rng, num_vertices, n, repeat_frac):
+    """``n`` query vids of which ``repeat_frac`` are repeats of earlier
+    queries — repeated queries share 100% of their neighborhoods, so a
+    repeat fraction of p gives >= p neighborhood overlap."""
+    u = max(1, int(round(n * (1 - repeat_frac))))
+    pool = rng.choice(num_vertices, size=u, replace=False)
+    extra = rng.choice(pool, size=n - u, replace=True)
+    vids = np.concatenate([pool, extra])
+    rng.shuffle(vids)
+    return vids
+
+
+def main(smoke=False):
+    import jax
+    from repro.configs.gnn import small_gnn_config
+    from repro.graph import partition_graph, synthetic_graph
+    from repro.serve.gnn import (GNNServeConfig, GNNServeScheduler,
+                                 ServeCacheConfig, direct_forward,
+                                 layerwise_embeddings, warm_cache)
+    from repro.train.gnn_trainer import init_model_params
+
+    V = 4000 if smoke else 20_000
+    Q = 128 if smoke else 1024
+    g = synthetic_graph(num_vertices=V, avg_degree=8, num_classes=16,
+                        feat_dim=32, seed=0)
+    part = partition_graph(g, 1, seed=0).parts[0]
+    cfg = small_gnn_config("graphsage", batch_size=64, feat_dim=32,
+                           num_classes=16, fanouts=(5, 10), hidden_size=64)
+    params = init_model_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+
+    # -- offline exactness ---------------------------------------------------
+    t0 = time.perf_counter()
+    embs = layerwise_embeddings(cfg, params, part, chunk_size=2048)
+    t_offline = time.perf_counter() - t0
+    ref = np.asarray(direct_forward(cfg, params, part))
+    err = float(np.abs(np.asarray(embs[-1]) - ref).max())
+    assert err < 1e-3, f"offline inference drifted from direct forward: {err}"
+    emit("gnn_serve_offline_layerwise", t_offline * 1e6,
+         f"V={part.num_solid};max_err_vs_direct={err:.2e}")
+
+    scfg = GNNServeConfig(
+        num_slots=32,
+        cache=ServeCacheConfig(cache_size=8192 if smoke else 65_536, ways=8))
+    srv = GNNServeScheduler(cfg, params, part, scfg)
+
+    def run(vids):
+        t0 = time.perf_counter()
+        srv.serve(vids)
+        return time.perf_counter() - t0
+
+    # -- cold vs pre-warmed (>= 50% neighborhood overlap) --------------------
+    # warmup with repeats so BOTH compiled paths (serve_step and the
+    # fast-path cache lookup) are built before any timed region
+    run(make_workload(rng, part.num_solid, 4 * scfg.num_slots, 0.5))
+    workload = make_workload(rng, part.num_solid, Q, 0.5)
+    srv.update_params(params)                 # clear cache, keep compiled fns
+    t_cold = run(workload)
+    srv.update_params(params)
+    warm_cache(srv.cache, embs, np.unique(workload))
+    t_warm = run(workload)
+    qps_cold, qps_warm = Q / t_cold, Q / t_warm
+    speedup = qps_warm / qps_cold
+    emit("gnn_serve_cold", t_cold / Q * 1e6, f"qps={qps_cold:.0f}")
+    emit("gnn_serve_prewarmed", t_warm / Q * 1e6,
+         f"qps={qps_warm:.0f};speedup={speedup:.1f}x")
+    if not smoke:       # wall-clock bars don't gate the tiny-scale CI pass
+        assert speedup >= 2.0, \
+            f"pre-warmed serving must be >= 2x cold, got {speedup:.2f}x"
+
+    # -- hit-rate sweep vs workload overlap ----------------------------------
+    sweep = {}
+    for frac in (0.0, 0.25, 0.5, 0.75):
+        srv.update_params(params)
+        vids = make_workload(rng, part.num_solid, Q, frac)
+        srv.cache.reset_counters()
+        dt = run(vids)
+        m = srv.metrics()
+        out_rate = (m["fast_path_hits"]
+                    + m[f"hits_l{cfg.num_layers}"]) / Q
+        sweep[frac] = {"qps": Q / dt, "out_rate": out_rate,
+                       "l1_rate": m["hit_rate_l1"]}
+        emit(f"gnn_serve_overlap_{int(frac*100)}", dt / Q * 1e6,
+             f"qps={Q/dt:.0f};output_hit_rate={out_rate:.2f};"
+             f"l1_hit_rate={m['hit_rate_l1']:.2f}")
+
+    print("RESULT" + json.dumps({
+        "offline_max_err": err, "qps_cold": qps_cold, "qps_warm": qps_warm,
+        "prewarm_speedup": speedup,
+        "sweep": {str(k): v for k, v in sweep.items()}}))
+
+
+if __name__ == "__main__":
+    main()

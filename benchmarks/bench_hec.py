@@ -18,6 +18,7 @@ _SCRIPT = r"""
 import os, sys, json
 R = 4
 cs, ls = int(sys.argv[1]), int(sys.argv[2])
+V = int(sys.argv[3]) if len(sys.argv) > 3 else 6000
 os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={R}"
 import jax, numpy as np
 from repro.configs.gnn import HECConfig, small_gnn_config
@@ -25,7 +26,7 @@ from repro.graph import partition_graph, synthetic_graph
 from repro.launch.mesh import make_gnn_mesh
 from repro.train.gnn_trainer import DistTrainer, build_dist_data
 
-g = synthetic_graph(num_vertices=6000, avg_degree=8, num_classes=6,
+g = synthetic_graph(num_vertices=V, avg_degree=8, num_classes=6,
                     feat_dim=32, seed=0)
 ps = partition_graph(g, R, seed=0)
 cfg = small_gnn_config("graphsage", batch_size=64, feat_dim=32, num_classes=6,
@@ -42,20 +43,23 @@ print("RESULT" + json.dumps({"rates": rates}))
 """
 
 
-def run(cs, ls):
+def run(cs, ls, vertices=6000):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.abspath(
         os.path.join(os.path.dirname(__file__), "..", "src"))
-    p = subprocess.run([sys.executable, "-c", _SCRIPT, str(cs), str(ls)],
-                       env=env, capture_output=True, text=True, timeout=1200)
+    p = subprocess.run(
+        [sys.executable, "-c", _SCRIPT, str(cs), str(ls), str(vertices)],
+        env=env, capture_output=True, text=True, timeout=1200)
     assert p.returncode == 0, p.stderr[-2000:]
     line = [l for l in p.stdout.splitlines() if l.startswith("RESULT")][-1]
     return json.loads(line[len("RESULT"):])
 
 
-def main():
-    for cs, ls in [(4096, 2), (16384, 2), (16384, 4)]:
-        r = run(cs, ls)
+def main(smoke=False):
+    sweep = [(4096, 2)] if smoke else [(4096, 2), (16384, 2), (16384, 4)]
+    vertices = 1500 if smoke else 6000
+    for cs, ls in sweep:
+        r = run(cs, ls, vertices)
         rates = ";".join(f"l{i}={x:.2f}" for i, x in enumerate(r["rates"]))
         emit(f"hec_hitrate_cs{cs}_ls{ls}", 0.0, rates)
 

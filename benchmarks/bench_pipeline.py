@@ -88,14 +88,15 @@ def bench_epoch(ps, epochs=2):
             "epoch_async_us": t_async * 1e6, "loss_drift": drift}
 
 
-def main():
+def main(smoke=False):
     from repro.graph import partition_graph, synthetic_graph
 
-    g = synthetic_graph(num_vertices=30_000, avg_degree=10, num_classes=16,
-                        feat_dim=32, seed=0)
+    g = synthetic_graph(num_vertices=4000 if smoke else 30_000,
+                        avg_degree=10, num_classes=16, feat_dim=32, seed=0)
     ps = partition_graph(g, 1, seed=0)
-    out = bench_sampler(ps.parts[0])
-    out.update(bench_epoch(ps))
+    out = bench_sampler(ps.parts[0], batch_size=256 if smoke else 1000,
+                        iters=2 if smoke else 5)
+    out.update(bench_epoch(ps, epochs=1 if smoke else 2))
     print("RESULT" + json.dumps(out))
 
 

@@ -19,6 +19,7 @@ from benchmarks.common import emit
 _SCRIPT = r"""
 import os, sys, json, time
 R = int(sys.argv[1]); model = sys.argv[2]
+V = int(sys.argv[3]) if len(sys.argv) > 3 else 6000
 os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={R}"
 import jax, numpy as np
 from repro.configs.gnn import small_gnn_config
@@ -27,7 +28,7 @@ from repro.graph import partition_graph, synthetic_graph
 from repro.launch.mesh import make_gnn_mesh
 from repro.train.gnn_trainer import DistTrainer, build_dist_data, layer_dims
 
-g = synthetic_graph(num_vertices=6000, avg_degree=8, num_classes=6,
+g = synthetic_graph(num_vertices=V, avg_degree=8, num_classes=6,
                     feat_dim=32, seed=0)
 ps = partition_graph(g, R, seed=0)
 cfg = small_gnn_config(model, batch_size=64, feat_dim=32, num_classes=6)
@@ -49,23 +50,27 @@ print("RESULT" + json.dumps({"epoch_s": dt, "steps": steps,
 """
 
 
-def run_rank(r, model):
+def run_rank(r, model, vertices=6000):
     env = dict(os.environ)
     env["PYTHONPATH"] = os.path.abspath(
         os.path.join(os.path.dirname(__file__), "..", "src"))
-    p = subprocess.run([sys.executable, "-c", _SCRIPT, str(r), model],
-                       env=env, capture_output=True, text=True, timeout=1200)
+    p = subprocess.run(
+        [sys.executable, "-c", _SCRIPT, str(r), model, str(vertices)],
+        env=env, capture_output=True, text=True, timeout=1200)
     assert p.returncode == 0, p.stderr[-2000:]
     line = [l for l in p.stdout.splitlines() if l.startswith("RESULT")][-1]
     return json.loads(line[len("RESULT"):])
 
 
-def main(ranks=(1, 2, 4), models=("graphsage", "gat")):
+def main(ranks=(1, 2, 4), models=("graphsage", "gat"), smoke=False):
     from repro.core.aep import epoch_time_model
+    vertices = 6000
+    if smoke:
+        ranks, models, vertices = (1, 2), ("graphsage",), 1500
     for model in models:
         base = None
         for r in ranks:
-            res = run_rank(r, model)
+            res = run_rank(r, model, vertices)
             # modeled target-cluster epoch time: compute scales ~1/R via
             # fewer minibatches/rank; AEP comm overlaps (paper: hidden at d=1)
             per_step_compute = 2e-3        # nominal target per-mb fwd+bwd (s)

@@ -30,12 +30,15 @@ def unfused_update(agg, self_h, wn, ws, b, dropout, seed):
     return o
 
 
-def main(iters=8):
+def main(iters=8, smoke=False):
     fused = jax.jit(lambda *a: ref.fused_update_ref(
         *a, relu=True, dropout=0.5, seed=jnp.uint32(1)))
-    for N, C, K, tag in [(16384, 128, 256, "papers100M-L0"),
-                         (65536, 256, 256, "papers100M-L1"),
-                         (16384, 100, 256, "products-L0")]:
+    shapes = [(16384, 128, 256, "papers100M-L0"),
+              (65536, 256, 256, "papers100M-L1"),
+              (16384, 100, 256, "products-L0")]
+    if smoke:
+        shapes, iters = [(2048, 128, 256, "smoke")], 2
+    for N, C, K, tag in shapes:
         ks = jax.random.split(jax.random.key(N), 5)
         agg = jax.random.normal(ks[0], (N, C))
         sh = jax.random.normal(ks[1], (N, C))

@@ -25,7 +25,7 @@ def load(path=DEFAULT):
         return json.load(f)
 
 
-def main(path=DEFAULT):
+def main(path=DEFAULT, smoke=False):
     if not os.path.exists(path):
         emit("roofline_missing", 0.0,
              "run: python -m repro.launch.dryrun --all --both-meshes "

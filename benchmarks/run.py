@@ -8,19 +8,28 @@ Prints ``name,us_per_call,derived`` CSV lines.
   hec    bench_hec          HEC hit-rates (paper §4.4)
   table3 bench_convergence  convergence parity (Table 3 / §4.5)
   pipeline bench_pipeline   vectorized sampler + async prefetch (§3.3/§3.4)
+  gnn_serve bench_gnn_serve inference serving: cold vs pre-warmed cache
   roofline                   dry-run roofline table (deliverable g)
+
+``--smoke`` runs every registered benchmark at tiny scale (a CI bit-rot
+guard: each suite must still execute end-to-end, numbers are meaningless).
 """
 from __future__ import annotations
 
-import sys
+import argparse
 import traceback
 
 
 def main() -> None:
-    only = sys.argv[1] if len(sys.argv) > 1 else None
-    from benchmarks import (bench_convergence, bench_distdgl, bench_hec,
-                            bench_pipeline, bench_scaling, bench_update,
-                            roofline)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("only", nargs="?", default=None,
+                    help="run only suites whose name contains this")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny-scale pass over every suite (CI)")
+    args = ap.parse_args()
+    from benchmarks import (bench_convergence, bench_distdgl, bench_gnn_serve,
+                            bench_hec, bench_pipeline, bench_scaling,
+                            bench_update, roofline)
     suites = {
         "fig2_update": bench_update.main,
         "fig3_fig4_scaling": bench_scaling.main,
@@ -28,14 +37,15 @@ def main() -> None:
         "hec_hitrates": bench_hec.main,
         "table3_convergence": bench_convergence.main,
         "pipeline": bench_pipeline.main,
+        "gnn_serve": bench_gnn_serve.main,
         "roofline": roofline.main,
     }
     print("name,us_per_call,derived")
     for name, fn in suites.items():
-        if only and only not in name:
+        if args.only and args.only not in name:
             continue
         try:
-            fn()
+            fn(smoke=args.smoke)
         except Exception as e:
             traceback.print_exc()
             print(f"{name},0.0,ERROR={type(e).__name__}")

@@ -9,8 +9,10 @@ that are independent of the step:
 
 * the delay-queue ADT used by the trainer,
 * analytic per-step communication volumes for AEP vs the DistDGL-like
-  sync baseline (used by benchmarks/bench_distdgl.py and the epoch-time
-  model in EXPERIMENTS.md).
+  sync baseline, and the ``epoch_time_model`` they feed — used by
+  ``benchmarks/bench_distdgl.py`` (Fig. 5 comparison, incl. the
+  paper-scale 64-rank model) and ``benchmarks/bench_scaling.py``
+  (Figs. 3 & 4 modeled epoch times).
 """
 from __future__ import annotations
 

@@ -1,1 +1,3 @@
 from repro.serve.scheduler import BatchScheduler, Request
+from repro.serve.gnn import (GNNRequest, GNNServeConfig, GNNServeScheduler,
+                             ServeCacheConfig, ServingCache)

@@ -1,0 +1,5 @@
+from repro.serve.gnn.embedding_cache import ServeCacheConfig, ServingCache
+from repro.serve.gnn.offline import (direct_forward, layerwise_embeddings,
+                                     serve_layer_dims, warm_cache)
+from repro.serve.gnn.scheduler import (GNNRequest, GNNServeConfig,
+                                       GNNServeScheduler)

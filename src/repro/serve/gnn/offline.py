@@ -1,0 +1,155 @@
+"""Layer-wise offline (full-graph, exact) GNN inference.
+
+Minibatch inference suffers neighborhood explosion: an L-layer model touches
+O(prod(fanouts)) vertices per query and recomputes shared intermediate
+embeddings once per query.  The classical fix (GraphSAGE appendix, DistDGL's
+offline inference) is layer-wise computation: materialize h^1 for EVERY
+vertex from h^0, then h^2 from h^1, ... — each vertex's layer-k embedding is
+computed exactly once, from its *full* neighbor list (no sampling, so the
+result is exact rather than a sampled approximation).
+
+Vertices are processed in fixed-size chunks so every device call has one
+compiled shape; per-layer full-graph activations are O(V * dim).  Used to
+
+  * pre-warm the serving cache (``warm_cache``), and
+  * as the exactness reference for the serving tests/benchmark
+    (``direct_forward`` computes the same quantity unchunked).
+
+Single-partition only (``part.num_halo == 0``): offline inference over a
+sharded graph is a follow-up (it needs one halo exchange per layer).
+"""
+from __future__ import annotations
+
+import functools
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hec as hec_lib
+from repro.graph.partition import Partition
+from repro.models.gnn import gat as gat_lib
+from repro.models.gnn import graphsage as sage_lib
+from repro.models.gnn.common import gather_neighbors, masked_mean
+
+
+def serve_layer_dims(cfg) -> List[int]:
+    """Dim of h^k for k = 1..L (hidden layers then the output layer)."""
+    hid = cfg.hidden_size if cfg.model == "graphsage" \
+        else cfg.hidden_size * cfg.num_heads
+    return [hid] * (cfg.num_layers - 1) + [cfg.num_classes]
+
+
+def full_neighbor_matrix(part: Partition) -> np.ndarray:
+    """Dense padded neighbor lists ``[S, max_deg]`` (-1 pad) from the CSR."""
+    S = part.num_solid
+    deg = part.indptr[1:] - part.indptr[:-1]
+    w = max(int(deg.max()) if S else 0, 1)
+    if len(part.indices) == 0:
+        return np.full((S, w), -1, np.int64)
+    col = np.arange(w)
+    in_row = col[None, :] < deg[:, None]
+    gi = np.minimum(part.indptr[:-1][:, None] + col[None, :],
+                    len(part.indices) - 1)
+    return np.where(in_row, part.indices[gi], -1)
+
+
+@functools.partial(jax.jit, static_argnames=("relu",))
+def _sage_chunk(p, h_all, dst, nbr, relu):
+    """h^{k+1} for one dst chunk: full-neighbor mean + the model's UPDATE."""
+    valid = jnp.ones(h_all.shape[0], bool)
+    feats, mask = gather_neighbors(h_all, nbr, valid)
+    agg = masked_mean(feats, mask)
+    self_h = h_all[jnp.clip(dst, 0, h_all.shape[0] - 1)]
+    return sage_lib.update(p, agg, self_h, relu=relu, dropout=0.0,
+                           seed=jnp.uint32(0))
+
+
+@jax.jit
+def _gat_nodes(p, h_all):
+    """Per-vertex projection + attention logits (shared across chunks)."""
+    z = jax.nn.relu(jnp.einsum("nd,dhe->nhe", h_all, p["w"]) + p["b"])
+    return z, (z * p["a_u"]).sum(-1), (z * p["a_v"]).sum(-1)
+
+
+@jax.jit
+def _gat_chunk(z, e_u, e_v, dst, nbr):
+    """Edge-softmax aggregation for one dst chunk (same math as gat_layer,
+    with dst rows addressed by id instead of the minibatch prefix)."""
+    idx = jnp.maximum(nbr, 0)
+    mask = nbr >= 0
+    dsts = jnp.clip(dst, 0, z.shape[0] - 1)
+    scores = jax.nn.leaky_relu(e_u[idx] + e_v[dsts][:, None, :], 0.2)
+    scores = jnp.where(mask[..., None], scores, -1e30)
+    alpha = jax.nn.softmax(scores, axis=1)
+    alpha = jnp.where(mask[..., None], alpha, 0.0)
+    h = jnp.einsum("nfh,nfhe->nhe", alpha, z[idx])
+    return h.reshape(dst.shape[0], -1)
+
+
+def layerwise_embeddings(cfg, params, part: Partition,
+                         chunk_size: int = 2048) -> List[jnp.ndarray]:
+    """Exact full-graph embeddings ``[h^1, ..., h^L]`` (each ``[S, d_k]``)."""
+    assert part.num_halo == 0, "offline inference is single-partition"
+    S = part.num_solid
+    L = cfg.num_layers
+    nbr_full = full_neighbor_matrix(part)
+    w = nbr_full.shape[1]
+    h = jnp.asarray(part.features)
+    outs: List[jnp.ndarray] = []
+    dims = serve_layer_dims(cfg)
+    for l in range(L):
+        p_l = params["layers"][l]
+        last = l == L - 1
+        if cfg.model == "gat":
+            z, e_u, e_v = _gat_nodes(p_l, h)
+        nxt = jnp.zeros((S, dims[l]), jnp.float32)
+        for start in range(0, S, chunk_size):
+            dst = np.full(chunk_size, -1, np.int64)
+            n = min(chunk_size, S - start)
+            dst[:n] = np.arange(start, start + n)
+            nbr = np.full((chunk_size, w), -1, np.int64)
+            nbr[:n] = nbr_full[start:start + n]
+            dst_j = jnp.asarray(dst)
+            nbr_j = jnp.asarray(nbr)
+            if cfg.model == "graphsage":
+                out = _sage_chunk(p_l, h, dst_j, nbr_j, relu=not last)
+            else:
+                out = _gat_chunk(z, e_u, e_v, dst_j, nbr_j)
+            safe = jnp.where(dst_j >= 0, dst_j, S)   # pad rows drop
+            nxt = nxt.at[safe].set(out.astype(jnp.float32), mode="drop")
+        h = nxt
+        outs.append(h)
+    return outs
+
+
+def direct_forward(cfg, params, part: Partition) -> jnp.ndarray:
+    """Unchunked full-graph forward through the model's own ``forward`` —
+    the independent reference ``layerwise_embeddings`` must match."""
+    assert part.num_halo == 0
+    nbr = jnp.asarray(full_neighbor_matrix(part), jnp.int32)
+    blocks = {"nbr_idx": [nbr] * cfg.num_layers}
+    h0 = jnp.asarray(part.features)
+    valid0 = jnp.ones(part.num_solid, bool)
+    fwd = sage_lib.forward if cfg.model == "graphsage" else gat_lib.forward
+    out, _ = fwd(params, h0, valid0, blocks, dropout=0.0)
+    return out
+
+
+def warm_cache(cache, embeddings: List[jnp.ndarray], vids,
+               chunk: int = 4096) -> int:
+    """Store offline embeddings of ``vids`` into every cache layer.
+
+    ``embeddings`` is the ``layerwise_embeddings`` output; pre-warming the
+    output layer lets repeat queries skip sampling AND compute entirely.
+    Returns the number of vertices stored per layer."""
+    vids = np.asarray(vids, np.int64)
+    for k, emb in enumerate(embeddings):
+        st = cache.states[k]
+        for s in range(0, len(vids), chunk):
+            v = vids[s:s + chunk]
+            st = hec_lib.hec_store(st, jnp.asarray(v, jnp.int32), emb[v])
+        cache.states[k] = st
+    cache.sync_host()
+    return len(vids)

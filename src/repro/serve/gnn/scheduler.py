@@ -1,0 +1,262 @@
+"""Batched GNN inference scheduler: fixed-shape microbatches over the
+on-demand sampler, with HEC-backed reuse of overlapping neighborhoods.
+
+Mirrors the LM scheduler's slot design (``serve/scheduler.py``): per-vertex
+inference requests queue up and are packed into microbatches of exactly
+``num_slots`` seeds, so the compiled ``serve_step`` shape never changes.
+Each microbatch:
+
+  1. **cache-aware sampling** (host): the queue is drained against the
+     serving cache's residency mirror — queries whose *output* embedding is
+     resident skip sampling and compute entirely (answered by a tiny
+     fixed-shape lookup step); the rest are sampled with
+     ``sample_blocks_vectorized(expandable=...)`` so any vertex whose
+     layer-k embedding is resident becomes a leaf, exactly as training
+     treats halo vertices,
+  2. **serve_step** (device, one compiled program): forward through the
+     model with a per-layer hook that substitutes cached embeddings
+     (device-side ``hec_lookup``), then stores every freshly computed
+     layer-k embedding back (``hec_store``), returning outputs + hit/miss
+     counters + the updated cache states,
+  3. **residency sync** (host): the authoritative device tags are mirrored
+     back so the next microbatch's sampling sees the new contents.
+
+All lookups of a microbatch read the cache state at step entry and all
+stores happen after the forward, so a leaf decided at sampling time is
+always backed by a device hit — OCF eviction can never strand a leaf.
+
+``update_params`` installs a new checkpoint and bumps the cache's model
+version, dropping every cached embedding (they are functions of the
+parameters).  Single-partition serving; multi-rank sharded serving is a
+ROADMAP follow-up.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hec as hec_lib
+from repro.graph.partition import Partition
+from repro.models.gnn import gat as gat_lib
+from repro.models.gnn import graphsage as sage_lib
+from repro.pipeline.vectorized_sampler import sample_blocks_vectorized
+from repro.serve.gnn.embedding_cache import ServeCacheConfig, ServingCache
+from repro.serve.gnn.offline import serve_layer_dims
+
+
+@dataclasses.dataclass(frozen=True)
+class GNNServeConfig:
+    num_slots: int = 64            # seeds per microbatch (compiled shape)
+    cache: ServeCacheConfig = dataclasses.field(
+        default_factory=ServeCacheConfig)
+    sample_seed: int = 0           # base seed of the per-microbatch RNG
+
+
+@dataclasses.dataclass
+class GNNRequest:
+    rid: int
+    vid: int
+    result: Optional[np.ndarray] = None   # [num_classes] once served
+    model_version: int = -1               # version that served it
+    served_by: str = ""                   # "output_cache" | "compute"
+
+    @property
+    def done(self) -> bool:
+        return self.result is not None
+
+
+class GNNServeScheduler:
+    def __init__(self, cfg, params, part: Partition,
+                 serve_cfg: Optional[GNNServeConfig] = None):
+        assert part.num_halo == 0, "serving is single-partition"
+        self.cfg = cfg
+        self.scfg = serve_cfg or GNNServeConfig()
+        self.part = part
+        self.params = params
+        self.features = jnp.asarray(part.features)
+        self.cache = ServingCache(serve_layer_dims(cfg), part.num_solid,
+                                  self.scfg.cache)
+        self.queue: deque[GNNRequest] = deque()
+        self._rid = 0
+        self._mb_counter = 0
+        self.steps_run = 0
+        self.queries_served = 0
+        self._step = self._build_step()
+        self._lookup = jax.jit(
+            lambda state, vids: hec_lib.hec_lookup(state, vids))
+
+    # -- compiled serve step ------------------------------------------------
+    def _build_step(self):
+        cfg = self.cfg
+        L = cfg.num_layers
+        fwd = sage_lib.forward if cfg.model == "graphsage" else gat_lib.forward
+
+        def stepf(params, states, features, mb):
+            nodes0 = mb["layer_nodes"][0]
+            mask0 = mb["node_mask"][0]
+            h0 = features[jnp.clip(nodes0, 0, features.shape[0] - 1)] \
+                * mask0[:, None]
+            valid0 = mask0
+            captured = {}
+            hits, lookups = [], []
+
+            def hook(k, h, valid):
+                if k == 0:
+                    return h, valid
+                vids = mb["layer_nodes"][k]
+                maskk = mb["node_mask"][k]
+                hit, emb = hec_lib.hec_lookup(states[k - 1], vids)
+                hit = hit & maskk
+                h = jnp.where(hit[:, None], emb, h)
+                valid = (valid | hit) & maskk
+                hits.append(hit.sum())
+                lookups.append(maskk.sum())
+                captured[k] = (h, valid)
+                return h, valid
+
+            out, valid = fwd(params, h0, valid0,
+                             {"nbr_idx": mb["nbr_idx"]}, dropout=0.0,
+                             seed=jnp.uint32(0), halo_hook=hook)
+            B = mb["seeds"].shape[0]
+            out = out[:B].astype(jnp.float32)
+            seed_vids = mb["seeds"]
+            hitL, embL = hec_lib.hec_lookup(states[L - 1], seed_vids)
+            hitL = hitL & mb["seed_mask"]
+            out = jnp.where(hitL[:, None], embL, out)
+            out_valid = (valid[:B] | hitL) & mb["seed_mask"]
+            hits.append(hitL.sum())
+            lookups.append(mb["seed_mask"].sum())
+
+            # store-back AFTER every lookup: newly computed (or refreshed)
+            # layer-k embeddings enter the cache for later microbatches
+            new_states = list(states)
+            for k in range(1, L):
+                h_k, valid_k = captured[k]
+                vids_k = jnp.where(valid_k, mb["layer_nodes"][k], -1)
+                new_states[k - 1] = hec_lib.hec_store(
+                    new_states[k - 1], vids_k, h_k)
+            vids_L = jnp.where(out_valid, seed_vids, -1)
+            new_states[L - 1] = hec_lib.hec_store(new_states[L - 1], vids_L,
+                                                  out)
+            stats = {"hits": jnp.stack(hits), "lookups": jnp.stack(lookups)}
+            return out, out_valid, new_states, stats
+
+        return jax.jit(stepf)
+
+    # -- host-side microbatch construction ----------------------------------
+    def _sample(self, vids: Sequence[int]) -> dict:
+        rng = np.random.default_rng(
+            [self.scfg.sample_seed, self._mb_counter])
+        self._mb_counter += 1
+        blocks = sample_blocks_vectorized(
+            self.part, np.asarray(vids, np.int64), self.cfg.fanouts, rng,
+            self.scfg.num_slots, expandable=self.cache.expandable_masks())
+        return {
+            "seeds": jnp.asarray(blocks.seeds.astype(np.int32)),
+            "seed_mask": jnp.asarray(blocks.seed_mask),
+            "nbr_idx": [jnp.asarray(x.astype(np.int32))
+                        for x in blocks.nbr_idx],
+            "layer_nodes": [jnp.asarray(x.astype(np.int32))
+                            for x in blocks.layer_nodes],
+            "node_mask": [jnp.asarray(x) for x in blocks.node_mask],
+        }
+
+    # -- public API ----------------------------------------------------------
+    def submit(self, vid: int) -> GNNRequest:
+        req = GNNRequest(rid=self._rid, vid=int(vid))
+        self._rid += 1
+        self.queue.append(req)
+        return req
+
+    def pump(self) -> int:
+        """Serve everything queued; returns microbatches executed."""
+        ran = 0
+        pending: List[GNNRequest] = []
+        while self.queue or pending:
+            # fill a FULL microbatch with cache misses: output-cache hits
+            # are answered inline and never occupy a slot, so warm-cache
+            # traffic doesn't run partially-empty compiled steps
+            while self.queue and len(pending) < self.scfg.num_slots:
+                n = min(len(self.queue),
+                        self.scfg.num_slots - len(pending))
+                wave = [self.queue.popleft() for _ in range(n)]
+                pending.extend(self._answer_from_output_cache(wave)
+                               if self.scfg.cache.enabled else wave)
+            if pending:
+                self._run_microbatch(pending[:self.scfg.num_slots])
+                pending = pending[self.scfg.num_slots:]
+                ran += 1
+        return ran
+
+    def serve(self, vids: Sequence[int]) -> np.ndarray:
+        """Convenience: submit ``vids``, pump, return outputs in order."""
+        reqs = [self.submit(v) for v in vids]
+        self.pump()
+        return np.stack([r.result for r in reqs])
+
+    def update_params(self, params) -> int:
+        """Install a new checkpoint; stale cached embeddings are dropped."""
+        self.params = params
+        return self.cache.on_model_update()
+
+    def metrics(self) -> dict:
+        out = self.cache.metrics()
+        out.update(steps_run=self.steps_run,
+                   queries_served=self.queries_served)
+        return out
+
+    # -- internals -----------------------------------------------------------
+    def _answer_from_output_cache(self, wave: List[GNNRequest]):
+        """Answer output-cache-resident queries without sampling or compute;
+        returns the requests that still need a microbatch."""
+        L = self.cfg.num_layers
+        flags = self.cache.resident[L - 1]
+        candidates = [r for r in wave if flags[r.vid]]
+        misses = [r for r in wave if not flags[r.vid]]
+        if candidates:
+            vids = np.full(self.scfg.num_slots, -1, np.int32)
+            vids[:len(candidates)] = [r.vid for r in candidates]
+            hit, emb = self._lookup(self.cache.states[L - 1],
+                                    jnp.asarray(vids))
+            hit, emb = np.asarray(hit), np.asarray(emb)
+            for i, r in enumerate(candidates):
+                if hit[i]:              # guaranteed by the residency mirror
+                    r.result = emb[i]
+                    r.model_version = self.cache.model_version
+                    r.served_by = "output_cache"
+                    self.cache.fast_path_hits += 1
+                    self.queries_served += 1
+                else:                   # defensive: mirror out of sync
+                    misses.append(r)
+        return misses
+
+    def _run_microbatch(self, reqs: List[GNNRequest]):
+        mb = self._sample([r.vid for r in reqs])
+        states = self.cache.states
+        if not self.scfg.cache.enabled:
+            # baseline mode: every microbatch sees an empty cache, so
+            # "disabled" really is pure on-demand sampling + compute
+            states = [hec_lib.hec_init(self.scfg.cache.cache_size,
+                                       self.scfg.cache.ways, d)
+                      for d in self.cache.dims]
+        out, out_valid, new_states, stats = self._step(
+            self.params, states, self.features, mb)
+        out = np.asarray(out)
+        out_valid = np.asarray(out_valid)
+        self.cache.record(np.asarray(stats["hits"]),
+                          np.asarray(stats["lookups"]))
+        if self.scfg.cache.enabled:
+            self.cache.states = new_states
+            self.cache.sync_host()
+        self.steps_run += 1
+        for i, r in enumerate(reqs):
+            assert out_valid[i], f"request {r.rid} (vid {r.vid}) not served"
+            r.result = out[i]
+            r.model_version = self.cache.model_version
+            r.served_by = "compute"
+            self.queries_served += 1

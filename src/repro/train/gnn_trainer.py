@@ -95,7 +95,10 @@ def sample_step(ps: PartitionSet, cfg: GNNConfig, seed_lists, rng) -> dict:
 
 def _epoch_mean(ep_metrics):
     """Aggregate per-step metrics: loss/acc weighted by real example count
-    (padded empty batches contribute zero weight), counters plain-averaged."""
+    (padded empty batches contribute zero weight), counters plain-averaged.
+    Also derives per-epoch AEP/HEC hit rates (``hec_hit_rate_l{l}``) as
+    epoch-summed hits / epoch-summed halos, so cache behavior is observable
+    per epoch without re-deriving it from per-step means."""
     if not ep_metrics:                   # zero-step epoch: no train seeds
         return {"examples": 0.0, "loss": 0.0, "acc": 0.0}
     w = np.array([m.get("examples", 1.0) for m in ep_metrics], np.float64)
@@ -109,6 +112,12 @@ def _epoch_mean(ep_metrics):
             out[key] = float(total)
         else:
             out[key] = float(vals.mean())
+    for key in ep_metrics[0]:
+        if key.startswith("hec_hits_l"):
+            l = key[len("hec_hits_l"):]
+            hits = sum(m[key] for m in ep_metrics)
+            halos = sum(m.get(f"hec_halos_l{l}", 0.0) for m in ep_metrics)
+            out[f"hec_hit_rate_l{l}"] = hits / halos if halos else 0.0
     return out
 
 
@@ -299,6 +308,9 @@ class DistTrainer:
         for l, (h_cnt, t_cnt) in enumerate(hits):
             metrics[f"hec_hits_l{l}"] = jax.lax.psum(h_cnt, "data")
             metrics[f"hec_halos_l{l}"] = jax.lax.psum(t_cnt, "data")
+        for l in range(L):
+            metrics[f"hec_occ_l{l}"] = jax.lax.pmean(
+                hec_lib.hec_occupancy(hec[l]), "data")
 
         exp = lambda t: jax.tree_util.tree_map(lambda a: a[None], t)
         return (params, opt_state, [exp(h) for h in hec], exp(inflight),

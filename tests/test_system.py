@@ -39,6 +39,16 @@ def test_single_rank_gat_trains(graph):
     assert acc > 0.5
 
 
+def test_epoch_metrics_surface_hec_observability(graph):
+    """Per-epoch metrics expose cache behavior: occupancy per HEC layer and
+    the derived AEP hit rate (hits / halos)."""
+    hist, _ = _train(graph, "graphsage", "aep", epochs=1, ranks=1)
+    m = hist[-1]
+    for l in range(2):                 # small config: 2 GNN layers
+        assert 0.0 <= m[f"hec_occ_l{l}"] <= 1.0
+        assert 0.0 <= m[f"hec_hit_rate_l{l}"] <= 1.0
+
+
 def test_single_rank_has_no_halos(graph):
     ps = partition_graph(graph, 1, seed=0)
     assert ps.parts[0].num_halo == 0
