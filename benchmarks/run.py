@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV lines.
   table3 bench_convergence  convergence parity (Table 3 / §4.5)
   pipeline bench_pipeline   vectorized sampler + async prefetch (§3.3/§3.4)
   gnn_serve bench_gnn_serve inference serving: cold vs pre-warmed cache
+  gnn_serve_dist bench_gnn_serve_dist sharded serving: shard scaling + halo cache
   roofline                   dry-run roofline table (deliverable g)
 
 ``--smoke`` runs every registered benchmark at tiny scale (a CI bit-rot
@@ -28,8 +29,8 @@ def main() -> None:
                     help="tiny-scale pass over every suite (CI)")
     args = ap.parse_args()
     from benchmarks import (bench_convergence, bench_distdgl, bench_gnn_serve,
-                            bench_hec, bench_pipeline, bench_scaling,
-                            bench_update, roofline)
+                            bench_gnn_serve_dist, bench_hec, bench_pipeline,
+                            bench_scaling, bench_update, roofline)
     suites = {
         "fig2_update": bench_update.main,
         "fig3_fig4_scaling": bench_scaling.main,
@@ -38,6 +39,7 @@ def main() -> None:
         "table3_convergence": bench_convergence.main,
         "pipeline": bench_pipeline.main,
         "gnn_serve": bench_gnn_serve.main,
+        "gnn_serve_dist": bench_gnn_serve_dist.main,
         "roofline": roofline.main,
     }
     print("name,us_per_call,derived")

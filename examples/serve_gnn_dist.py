@@ -1,0 +1,88 @@
+"""Sharded GNN serving: route queries to owner shards, gather halos.
+
+Run:
+  PYTHONPATH=src python examples/serve_gnn_dist.py
+
+Partitions a synthetic graph across 4 serving shards and demonstrates the
+distributed serving flow:
+  1. queries routed to their owner shard (`PartitionSet.route`) and served
+     in synchronized fixed-slot rounds, cross-cut neighbors gathered with
+     one all_to_all pair per layer,
+  2. degree-weighted pre-warm from distributed offline inference (exact,
+     one halo exchange per layer) — repeat queries answer from the output
+     cache, cross-cut neighborhoods stop traveling,
+  3. checkpoint update invalidating every shard's cache at once.
+"""
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=4")
+
+import jax
+import numpy as np
+
+from repro.configs.gnn import small_gnn_config
+from repro.graph import partition_graph, synthetic_graph
+from repro.launch.mesh import make_gnn_mesh
+from repro.serve.gnn import ServeCacheConfig, prewarm
+from repro.serve.gnn.distributed import (DistGNNServeScheduler,
+                                         DistServeConfig)
+from repro.train.gnn_trainer import init_model_params
+
+R = 4
+
+
+def main():
+    g = synthetic_graph(num_vertices=4000, avg_degree=8, num_classes=8,
+                        feat_dim=32, seed=0)
+    ps = partition_graph(g, R, seed=0)
+    print(f"{g.num_vertices} vertices -> {R} shards "
+          f"{[p.num_solid for p in ps.parts]}, "
+          f"edge cut {ps.edge_cut_frac:.1%}")
+
+    cfg = small_gnn_config("graphsage", batch_size=128, feat_dim=32,
+                           num_classes=8)
+    params = init_model_params(jax.random.key(0), cfg)
+    srv = DistGNNServeScheduler(
+        cfg, params, ps, make_gnn_mesh(R),
+        DistServeConfig(num_slots=16, halo_slots=128,
+                        cache=ServeCacheConfig(cache_size=16_384, ways=8)))
+
+    # 1. queries hit whichever shard owns them; rounds are synchronized
+    rng = np.random.default_rng(1)
+    vids = rng.integers(0, g.num_vertices, 64)
+    out = srv.serve(vids)
+    m = srv.metrics()
+    print(f"cold serve: {len(vids)} queries -> classes "
+          f"{np.argmax(out[:8], -1).tolist()}... ({m['steps_run']} rounds; "
+          f"{m['halo_l0_mirror']} halo features from the shard mirror, "
+          f"{m['halo_seen']} hidden-layer halo rows, "
+          f"{m['halo_fetched']} answered via all_to_all)")
+
+    # 2. degree-weighted pre-warm (distributed offline inference)
+    srv.update_params(params)
+    srv.cache.reset_counters()
+    n = prewarm(srv, policy="degree", frac=0.5)
+    out2 = srv.serve(vids)
+    m = srv.metrics()
+    print(f"pre-warmed serve: {n} hub vertices/layer warmed per owner "
+          f"shard; {m['fast_path_hits']} of {len(vids)} answered from the "
+          f"output cache without sampling or compute")
+
+    # repeats are pure fast-path: identical bits, zero rounds
+    steps = srv.steps_run
+    out2b = srv.serve(vids)
+    print(f"repeat serve: rounds still {srv.steps_run - steps + 0}, "
+          f"identical results: {np.array_equal(out2, out2b)}")
+
+    # 3. checkpoint update: every shard drops its cache at once
+    v = srv.update_params(params)
+    req = srv.submit(int(vids[0]))
+    srv.pump()
+    print(f"cache invalidated on checkpoint update (model_version={v}, "
+          f"occupancy_l1={srv.metrics()['occupancy_l1']:.2f}); repeat "
+          f"query re-served by {req.served_by!r} — no stale answers")
+
+
+if __name__ == "__main__":
+    main()

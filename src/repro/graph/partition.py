@@ -61,6 +61,22 @@ class PartitionSet:
     def num_parts(self) -> int:
         return len(self.parts)
 
+    def route(self, vids: np.ndarray):
+        """O(1) owner routing: ``(owner_rank, local_index)`` per VID_o.
+
+        One gather each into the precomputed ``owner`` / ``local_index``
+        tables — the single lookup shared by the trainer's host prep and
+        the serving-side query router.  ``local_index[v]`` is the solid
+        VID_p of ``v`` inside ``parts[owner[v]]``.  Out-of-range vids
+        raise (negative indices would otherwise wrap around and silently
+        route to the wrong owner)."""
+        vids = np.asarray(vids)
+        if len(vids) and (vids.min() < 0 or vids.max() >= len(self.owner)):
+            raise ValueError(
+                f"vid out of range [0, {len(self.owner)}): "
+                f"{vids[(vids < 0) | (vids >= len(self.owner))][:5]}")
+        return self.owner[vids], self.local_index[vids]
+
     def db_halo(self, i: int, j: int) -> np.ndarray:
         """VID_o owned by rank i that rank j holds as halos (sorted)."""
         pj = self.parts[j]

@@ -1,0 +1,123 @@
+"""Sharded multi-rank GNN serving dry-run.
+
+Stands up one serving shard per host device over a partitioned synthetic
+graph and reports routing/throughput/halo-gather behavior:
+
+  python -m repro.launch.gnn_serve_dist [--ranks 4] [--vertices 20000]
+                                        [--slots 32] [--queries 1024]
+                                        [--policy degree] [--prewarm-frac .25]
+
+Flow: synthetic power-law graph -> min-cut partitions -> per-shard caches
+pre-warmed by **distributed offline inference** under the selected policy
+(default: degree-weighted — hubs dominate sampled neighborhoods, so they
+buy the most leaf-rate per cache line) -> ``DistGNNServeScheduler`` routes
+a query workload to owner shards and serves it with per-layer halo
+all_to_all gathers.  Complements ``gnn_serve`` (single-rank) with the
+scale-out story.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ranks", type=int, default=4)
+    ap.add_argument("--vertices", type=int, default=20_000)
+    ap.add_argument("--model", default="graphsage",
+                    choices=["graphsage", "gat"])
+    ap.add_argument("--slots", type=int, default=32)
+    ap.add_argument("--halo-slots", type=int, default=256)
+    ap.add_argument("--queries", type=int, default=1024)
+    ap.add_argument("--overlap", type=float, default=0.5,
+                    help="fraction of queries that repeat earlier ones")
+    ap.add_argument("--cache-size", type=int, default=65_536)
+    ap.add_argument("--policy", default="degree",
+                    choices=["degree", "query_log", "none"],
+                    help="cache pre-warm policy (default degree-weighted)")
+    ap.add_argument("--prewarm-frac", type=float, default=None,
+                    help="override the policy's default fraction "
+                         "(degree: 0.25, query_log: 1.0)")
+    args = ap.parse_args()
+
+    os.environ.setdefault(
+        "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.ranks}")
+    import jax
+    from repro.configs.gnn import small_gnn_config
+    from repro.graph import partition_graph, synthetic_graph
+    from repro.launch.mesh import make_gnn_mesh
+    from repro.serve.gnn import ServeCacheConfig, prewarm
+    from repro.serve.gnn.distributed import (DistGNNServeScheduler,
+                                             DistServeConfig)
+    from repro.train.gnn_trainer import init_model_params
+
+    R = args.ranks
+    g = synthetic_graph(num_vertices=args.vertices, avg_degree=8,
+                        num_classes=16, feat_dim=32, seed=0)
+    ps = partition_graph(g, R, seed=0)
+    print(f"serving graph: {g.num_vertices} vertices over {R} shards, "
+          f"edge cut {ps.edge_cut_frac:.2%}, shard sizes "
+          f"{[p.num_solid for p in ps.parts]}")
+
+    cfg = small_gnn_config(args.model, batch_size=64, feat_dim=32,
+                           num_classes=16, fanouts=(5, 10), hidden_size=64)
+    params = init_model_params(jax.random.key(0), cfg)
+    srv = DistGNNServeScheduler(
+        cfg, params, ps, make_gnn_mesh(R),
+        DistServeConfig(num_slots=args.slots, halo_slots=args.halo_slots,
+                        cache=ServeCacheConfig(cache_size=args.cache_size,
+                                               ways=8)))
+
+    rng = np.random.default_rng(0)
+    n_unique = max(1, int(round(args.queries * (1 - args.overlap))))
+    pool = rng.choice(g.num_vertices, size=n_unique, replace=False)
+    vids = np.concatenate(
+        [pool, rng.choice(pool, size=args.queries - n_unique, replace=True)])
+    rng.shuffle(vids)
+
+    # compile outside any reported timing, then reset cache AND counters
+    srv.serve(vids[:2 * args.slots * R])
+    srv.update_params(params)
+    srv.cache.reset_counters()
+    srv.reset_frontend()
+
+    if args.policy != "none":
+        t0 = time.perf_counter()
+        n = prewarm(srv, policy=args.policy, frac=args.prewarm_frac,
+                    query_log=vids if args.policy == "query_log" else None)
+        print(f"pre-warm:   policy={args.policy} stored {n} vertices/layer "
+              f"across {R} shards in {time.perf_counter() - t0:.3f}s")
+
+    t0 = time.perf_counter()
+    srv.serve(vids)
+    dt = time.perf_counter() - t0
+    m = srv.metrics()
+    print(f"serve:      {args.queries} queries in {dt:.3f}s "
+          f"({args.queries / dt:.0f} q/s), {m['steps_run']} rounds, "
+          f"{m['fast_path_hits']} fast-path answers; "
+          f"latency p50={m['latency_p50_ms']:.1f}ms "
+          f"p99={m['latency_p99_ms']:.1f}ms")
+    print(f"halo:       {m['halo_seen']} rows seen, "
+          f"{m['halo_local_hits']} served locally "
+          f"(cached-halo frac {m['cached_halo_frac']:.2f}), "
+          f"{m['halo_fetched']} fetched via all_to_all")
+
+    # repeat pass: overlapping neighborhoods now resident per shard
+    srv.cache.reset_counters()
+    srv.reset_frontend()
+    t0 = time.perf_counter()
+    srv.serve(vids)
+    dt2 = time.perf_counter() - t0
+    m = srv.metrics()
+    print(f"repeat:     {args.queries} queries in {dt2:.3f}s "
+          f"({args.queries / dt2:.0f} q/s), {m['fast_path_hits']} fast-path, "
+          f"cached-halo frac {m['cached_halo_frac']:.2f} -> "
+          f"{dt / max(dt2, 1e-9):.1f}x first pass")
+
+
+if __name__ == "__main__":
+    main()

@@ -98,7 +98,8 @@ def sample_blocks_vectorized(part: Partition, seeds_p: np.ndarray,
     (uniform without replacement per row; full row when ``deg <= fanout``).
 
     ``expandable`` (optional, length ``L+1``; entry ``k`` a bool array over
-    VID_p or ``None``) gates neighborhood expansion per layer: a node at
+    VID_p — covering the solids, or solids + halos for sharded serving —
+    or ``None``) gates neighborhood expansion per layer: a node at
     layer ``k`` with ``expandable[k][vid] == False`` is kept as a leaf —
     its layer-``k`` embedding is expected from a cache (serving) or the HEC
     (training halos), so its subtree is never sampled.  Entry 0 is unused
@@ -127,7 +128,11 @@ def sample_blocks_vectorized(part: Partition, seeds_p: np.ndarray,
         n_dst = len(cur)
         allow = None
         if expandable is not None and expandable[k + 1] is not None:
-            allow = expandable[k + 1][np.where(cur >= 0, cur, 0)]
+            # masks may cover solids only (single-partition serving) or
+            # solids + halos (sharded serving); rows outside the mask are
+            # halos or padding, which never expand regardless of `allow`
+            m = expandable[k + 1]
+            allow = m[np.where((cur >= 0) & (cur < len(m)), cur, 0)]
         nbrs = _draw_neighbors(part.indptr, part.indices, cur, S, f, rng,
                                allow=allow)
 

@@ -1,5 +1,8 @@
 from repro.serve.gnn.embedding_cache import ServeCacheConfig, ServingCache
 from repro.serve.gnn.offline import (direct_forward, layerwise_embeddings,
                                      serve_layer_dims, warm_cache)
-from repro.serve.gnn.scheduler import (GNNRequest, GNNServeConfig,
-                                       GNNServeScheduler)
+from repro.serve.gnn.prewarm import (degree_weighted_vids, prewarm,
+                                     query_log_vids, select_prewarm_vids)
+from repro.serve.gnn.scheduler import (AdmissionRejected, GNNRequest,
+                                       GNNServeConfig, GNNServeScheduler,
+                                       LatencyStats)

@@ -1,0 +1,8 @@
+from repro.serve.gnn.distributed.offline import (exchange_halos,
+                                                 global_neighbor_width,
+                                                 layerwise_embeddings_dist)
+from repro.serve.gnn.distributed.router import QueryRouter
+from repro.serve.gnn.distributed.scheduler import (DistGNNServeScheduler,
+                                                   DistServeConfig,
+                                                   build_serve_data)
+from repro.serve.gnn.distributed.sharded_cache import ShardedServingCache

@@ -1,0 +1,113 @@
+"""Distributed layer-wise offline inference: sharded, exact, one halo
+exchange per layer.
+
+Layer-wise inference over a partitioned graph needs, at layer ``l``, the
+``h^l`` of every *halo* replica — exactly the ``db_halo`` contract training
+pushes under AEP.  Here the exchange is *synchronous and exact* (offline
+inference is a batch job, not a latency path): before computing layer
+``l+1``, every rank receives the layer-``l`` embeddings of its halos from
+their owners — ONE exchange per layer, sized by the edge cut, and that is
+the entire communication cost of exact full-graph inference.
+
+Bit-exactness: each shard runs the *same* chunked per-layer kernels as the
+single-rank engine (``_sage_chunk`` / ``_gat_chunk``) over its local CSR
+padded to the **global** max degree.  Every op is row-wise (per-dst mean /
+softmax over the shared padded width, per-row matmuls), so a vertex's
+layer-``l`` embedding is the same bit pattern whether its row lives in the
+single-rank chunk loop or a shard's — pinned by ``tests/test_dist_serving``
+(``layerwise_embeddings_dist`` == single-rank ``layerwise_embeddings`` on
+the unpartitioned graph).
+
+Used to pre-warm every serving shard (the sharded cache stores each
+vertex's embeddings on its owner) and as the exactness reference for the
+sharded serving tests/benchmark.
+"""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.partition import PartitionSet
+from repro.serve.gnn.offline import (full_neighbor_matrix,
+                                     layer_chunk_outputs, serve_layer_dims)
+
+
+def global_neighbor_width(ps: PartitionSet) -> int:
+    """Global max degree — the shared neighbor-matrix pad width."""
+    w = 1
+    for p in ps.parts:
+        if p.num_solid:
+            w = max(w, int((p.indptr[1:] - p.indptr[:-1]).max()))
+    return w
+
+
+def exchange_halos(ps: PartitionSet,
+                   h_solid: List[np.ndarray]) -> Tuple[List[np.ndarray], int]:
+    """The per-layer halo exchange: every rank receives the current-layer
+    embeddings of its halo replicas from their owners.
+
+    Pair (i, j) moves exactly ``db_halo(i, j)`` rows — what rank i owes
+    rank j under the partition contract.  Returns per-rank halo rows
+    (aligned with ``part.halo_vids``) and the total bytes moved (payload +
+    vid tags), the number the benchmark's comm model consumes."""
+    dim = h_solid[0].shape[1] if len(h_solid) else 0
+    rows_out: List[np.ndarray] = []
+    nbytes = 0
+    for j, pj in enumerate(ps.parts):
+        rows = np.zeros((pj.num_halo, dim), np.float32)
+        for i in range(ps.num_parts):
+            if i == j:
+                continue
+            vids = ps.db_halo(i, j)          # VID_o owned by i, halos on j
+            if not len(vids):
+                continue
+            _, local = ps.route(vids)
+            payload = h_solid[i][local]      # rank i's send buffer to j
+            rows[np.searchsorted(pj.halo_vids, vids)] = payload
+            nbytes += payload.nbytes + vids.size * 4
+        rows_out.append(rows)
+    return rows_out, nbytes
+
+
+def layerwise_embeddings_dist(cfg, params, ps: PartitionSet,
+                              chunk_size: int = 2048,
+                              with_stats: bool = False):
+    """Exact full-graph embeddings ``[h^1, ..., h^L]`` in GLOBAL vertex
+    order (each ``[V, d_k]``), computed shard-by-shard with exactly one
+    halo exchange per layer."""
+    R = ps.num_parts
+    V = len(ps.owner)
+    L = cfg.num_layers
+    dims = serve_layer_dims(cfg)
+    w = global_neighbor_width(ps)
+    nbr_full = [full_neighbor_matrix(p, width=w) for p in ps.parts]
+    h_solid = [np.asarray(p.features, np.float32) for p in ps.parts]
+    outs: List[np.ndarray] = []
+    bytes_exchanged = 0
+    for l in range(L):
+        p_l = params["layers"][l]
+        last = l == L - 1
+        halo_rows, nb = exchange_halos(ps, h_solid)
+        bytes_exchanged += nb
+        nxt_solid: List[np.ndarray] = []
+        for r, part in enumerate(ps.parts):
+            S = part.num_solid
+            h_all = jnp.asarray(
+                np.concatenate([h_solid[r], halo_rows[r]], 0)
+                if part.num_halo else h_solid[r])
+            nxt = np.zeros((S, dims[l]), np.float32)
+            for start, n, out in layer_chunk_outputs(
+                    cfg, p_l, h_all, nbr_full[r], chunk_size, last):
+                nxt[start:start + n] = np.asarray(out, np.float32)[:n]
+            nxt_solid.append(nxt)
+        h_solid = nxt_solid
+        g = np.zeros((V, dims[l]), np.float32)
+        for r, part in enumerate(ps.parts):
+            g[part.solid_vids] = h_solid[r]
+        outs.append(g)
+    if with_stats:
+        return outs, {"bytes_exchanged": bytes_exchanged,
+                      "exchanges": L, "neighbor_width": w}
+    return outs

@@ -1,0 +1,51 @@
+"""Partition-aware query routing for sharded GNN serving.
+
+Every queried vertex has exactly one owner shard (the partition contract),
+so routing is a single ``PartitionSet.route`` gather: owner rank + solid
+VID_p in one step.  The router keeps one FIFO per shard and packs
+synchronized *rounds* — up to ``num_slots`` seeds per rank per round — so
+the compiled shard_map ``serve_step`` always sees the same ``[R, slots]``
+shape regardless of how skewed the query stream is across shards (a rank
+with nothing queued contributes an empty, fully masked microbatch, exactly
+like a short rank in training).
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.graph.partition import PartitionSet
+
+
+class QueryRouter:
+    """Owner routing + per-rank fixed-slot round packing."""
+
+    def __init__(self, ps: PartitionSet):
+        self.ps = ps
+        self.num_ranks = ps.num_parts
+        self.queues: List[deque] = [deque() for _ in range(ps.num_parts)]
+
+    def __len__(self) -> int:
+        return sum(len(q) for q in self.queues)
+
+    def enqueue(self, req) -> int:
+        """Route ``req.vid`` (VID_o) to its owner's queue; returns the rank.
+
+        The entry carries the owner-local solid VID_p so the serving shard
+        samples directly in its partition-local id space."""
+        owner, local = self.ps.route(np.asarray([req.vid]))
+        r = int(owner[0])
+        self.queues[r].append((req, int(local[0])))
+        return r
+
+    def drain(self, rank: int, max_n: int) -> List[Tuple[object, int]]:
+        """Pop up to ``max_n`` routed entries from one shard's queue."""
+        q = self.queues[rank]
+        n = min(len(q), max_n)
+        return [q.popleft() for _ in range(n)]
+
+    @staticmethod
+    def seeds_of(entries: Sequence[Tuple[object, int]]) -> np.ndarray:
+        return np.array([local for _, local in entries], np.int64)

@@ -1,0 +1,396 @@
+"""Sharded multi-rank GNN serving: one serving shard per mesh rank.
+
+Scaling the serving subsystem the same way training scales (paper §3.1):
+the graph is partitioned across ``R`` mesh ranks, each shard holds its
+partition's CSR + features + per-layer HEC cache, and a compiled shard_map
+``serve_step`` answers one synchronized round of per-rank fixed-slot
+microbatches.  Per round:
+
+  1. **routing** (host): the ``QueryRouter`` maps each queried VID_o to its
+     owner rank (``PartitionSet.route``) and packs up to ``num_slots``
+     seeds per rank — one compiled ``[R, slots]`` shape covers every rank,
+     however skewed the query stream,
+  2. **cache-aware partition-local sampling** (host, per rank): the
+     pipeline's vectorized sampler with this shard's ``expandable`` masks —
+     cache-resident vertices (solids *and* halos) become leaves,
+  3. **serve_step** (device, one shard_map program): forward through the
+     model.  Layer-0 halo rows read the shard's static **feature mirror**
+     (features never go stale, so they are replicated at build time and
+     never travel).  At every hidden layer the local shard cache is
+     consulted first (``hec_lookup``), then the *remaining* cross-cut halo
+     rows are gathered from their owners' caches with ONE all_to_all
+     request/response pair (the trainer's sync-mode pattern: fixed
+     ``halo_slots`` per rank pair).  Fetched halo embeddings are stored
+     back into the local shard cache, so repeated cross-cut neighborhoods
+     stop traveling — the cached-halo fraction is a first-class metric,
+  4. **residency sync** (host): device tags mirrored per shard.
+
+A halo row whose owner cannot answer (cold owner cache, or more misses
+than ``halo_slots``) is dropped from aggregation via the validity mask —
+the same bounded-degradation semantics training uses for HEC misses.  With
+owner caches pre-warmed from distributed offline inference the answers are
+exact and bit-match single-rank serving.
+
+``update_params`` bumps the model version and drops every cached line on
+every shard at once — no shard can serve a stale answer after a
+checkpoint update.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.core import hec as hec_lib
+from repro.graph.partition import PartitionSet
+from repro.models.gnn import gat as gat_lib
+from repro.models.gnn import graphsage as sage_lib
+from repro.pipeline.vectorized_sampler import (sample_blocks_vectorized,
+                                               stack_ranks)
+from repro.serve.gnn.distributed.router import QueryRouter
+from repro.serve.gnn.distributed.sharded_cache import ShardedServingCache
+from repro.serve.gnn.embedding_cache import ServeCacheConfig
+from repro.serve.gnn.offline import serve_layer_dims
+from repro.serve.gnn.scheduler import GNNRequest, ServeFrontend
+from repro.train.gnn_trainer import _pad_stack
+from repro.utils import compat
+
+
+@dataclasses.dataclass(frozen=True)
+class DistServeConfig:
+    num_slots: int = 32            # seeds per rank per round (compiled shape)
+    halo_slots: int = 256          # all_to_all request slots per rank pair
+    cache: ServeCacheConfig = dataclasses.field(
+        default_factory=ServeCacheConfig)
+    sample_seed: int = 0           # base seed of the per-round RNG
+    max_queue_depth: Optional[int] = None  # admission cap across all shards
+
+
+def build_serve_data(ps: PartitionSet) -> dict:
+    """Per-rank stacked serving tables (the serve-side ``build_dist_data``):
+    features, partition id maps, per-VID_p owner ranks, and a **halo
+    feature mirror** — each shard carries the input features of its halo
+    replicas.  Features are static and model-version-independent, so the
+    mirror never goes stale; it removes the layer-0 all_to_all entirely
+    (training keeps halos feature-less because features *change* there —
+    they don't in serving)."""
+    num_solid = np.array([p.num_solid for p in ps.parts], np.int32)
+    feats = _pad_stack([p.features for p in ps.parts], 0.0)
+    halo_feats = []
+    for p in ps.parts:
+        owner, local = ps.route(p.halo_vids) if p.num_halo else (
+            np.empty(0, np.int64), np.empty(0, np.int64))
+        hf = np.zeros((max(p.num_halo, 1), feats.shape[-1]), np.float32)
+        for r in range(ps.num_parts):
+            mine = owner == r
+            hf[np.flatnonzero(mine)] = ps.parts[r].features[local[mine]]
+        halo_feats.append(hf)
+    vid_o = _pad_stack([p.vid_p_to_o().astype(np.int32) for p in ps.parts],
+                       -1)
+    owner_p = _pad_stack(
+        [np.concatenate([np.full(p.num_solid, r, np.int32),
+                         p.halo_owner.astype(np.int32)])
+         for r, p in enumerate(ps.parts)], -1)
+    return {
+        "features": jnp.asarray(feats, jnp.float32),
+        "halo_features": jnp.asarray(_pad_stack(halo_feats, 0.0),
+                                     jnp.float32),
+        "num_solid": jnp.asarray(num_solid),
+        "vid_o": jnp.asarray(vid_o),
+        "owner_p": jnp.asarray(owner_p),
+    }
+
+
+class DistGNNServeScheduler(ServeFrontend):
+    """Sharded serving over a ``PartitionSet`` on a 1-D ``("data",)`` mesh."""
+
+    def __init__(self, cfg, params, ps: PartitionSet, mesh,
+                 serve_cfg: Optional[DistServeConfig] = None):
+        self.cfg = cfg
+        self.scfg = serve_cfg or DistServeConfig()
+        self.ps = ps
+        self.mesh = mesh
+        self.num_ranks = ps.num_parts
+        self.params = params
+        self.data = build_serve_data(ps)
+        self.cache = ShardedServingCache(serve_layer_dims(cfg), ps,
+                                         self.scfg.cache)
+        self.router = QueryRouter(ps)
+        self._init_frontend()
+        self._step = self._build_step()
+        self._lookup = jax.jit(jax.vmap(
+            lambda state, vids: hec_lib.hec_lookup(state, vids)))
+
+    # -- compiled shard_map serve step --------------------------------------
+    def _build_step(self):
+        cfg = self.cfg
+        scfg = self.scfg
+        L = cfg.num_layers
+        R = self.num_ranks
+        nc = scfg.halo_slots
+        fwd = sage_lib.forward if cfg.model == "graphsage" else gat_lib.forward
+
+        def fetch(states, vids_o, owner, need, h, k):
+            """One all_to_all request/response pair: ``h^k`` of the `need`
+            rows from their owners' layer-k caches (k >= 1; layer-0 halo
+            features come from the static per-shard mirror and never
+            travel).  Returns the substituted ``h``, the rows answered,
+            and how many rows actually traveled."""
+            N = vids_o.shape[0]
+            d = h.shape[1]
+            slots = min(nc, N)     # a layer never needs more than its rows
+            prio = jnp.arange(N, 0, -1).astype(jnp.float32)
+            req_rows, pos_rows = [], []
+            for j in range(R):
+                score = jnp.where(need & (owner == j), prio, -1.0)
+                topv, topi = jax.lax.top_k(score, slots)
+                ok = topv > 0
+                req_rows.append(jnp.where(ok, vids_o[topi], -1))
+                pos_rows.append(jnp.where(ok, topi, N))  # N -> scatter-drop
+            req = jnp.stack(req_rows).astype(jnp.int32)       # [R, slots]
+            pos = jnp.stack(pos_rows)
+            got_req = jax.lax.all_to_all(req, "data", 0, 0)   # [R_src, slots]
+            own, vals = hec_lib.hec_lookup(states[k - 1],
+                                           got_req.reshape(-1))
+            own = own.reshape(R, slots)
+            vals = vals.reshape(R, slots, d)
+            resp = jax.lax.all_to_all(
+                jnp.concatenate(
+                    [vals.astype(jnp.float32),
+                     own[..., None].astype(jnp.float32)], -1),
+                "data", 0, 0)                                    # [R, nc, d+1]
+            r_vals, r_ok = resp[..., :-1], resp[..., -1] > 0.5
+            fetched = jnp.zeros((N, d), h.dtype)
+            got = jnp.zeros(N, bool)
+            # request rows to distinct owners occupy disjoint positions, so
+            # per-owner scatters never collide; pad slots land on N (drop)
+            for j in range(R):
+                fetched = fetched.at[pos[j]].set(
+                    r_vals[j].astype(h.dtype) * r_ok[j][:, None],
+                    mode="drop")
+                got = got.at[pos[j]].max(r_ok[j], mode="drop")
+            h = jnp.where(got[:, None], fetched, h)
+            return h, got, (req >= 0).sum()
+
+        def stepf(params, states, data, mb):
+            sq = lambda t: jax.tree_util.tree_map(lambda a: a[0], t)
+            data, mb = sq(data), sq(mb)
+            states = [sq(s) for s in states]
+            num_solid = data["num_solid"]
+            Pmax = data["vid_o"].shape[0]
+            lut = lambda tab, n: jnp.where(
+                n >= 0, tab[jnp.clip(n, 0, Pmax - 1)], -1)
+            vid_o_nodes = [lut(data["vid_o"], n)
+                           for n in mb["layer_nodes"]]
+            owner_nodes = [lut(data["owner_p"], n)
+                           for n in mb["layer_nodes"]]
+
+            nodes0 = mb["layer_nodes"][0]
+            mask0 = mb["node_mask"][0]
+            is_halo0 = (nodes0 >= num_solid) & mask0
+            Smax = data["features"].shape[0]
+            Hmax = data["halo_features"].shape[0]
+            # layer 0: solids read their own features, halos the static
+            # per-shard mirror — no layer-0 communication at all
+            h_sol = data["features"][jnp.clip(nodes0, 0, Smax - 1)]
+            h_hal = data["halo_features"][
+                jnp.clip(nodes0 - num_solid, 0, Hmax - 1)]
+            h0 = jnp.where(is_halo0[:, None], h_hal, h_sol) * mask0[:, None]
+            valid0 = mask0
+
+            captured = {}
+            hits, lookups = [], []
+            halo_seen, halo_local = [], []
+            halo_fetched, halo_requested = [], []
+
+            def hook(k, h, valid):
+                if k == 0:
+                    return h, valid
+                vids = vid_o_nodes[k]
+                maskk = mb["node_mask"][k]
+                is_halo = (mb["layer_nodes"][k] >= num_solid) & maskk
+                # local shard cache first: cached solids AND cached halos
+                hit, emb = hec_lib.hec_lookup(states[k - 1], vids)
+                hit = hit & maskk
+                h = jnp.where(hit[:, None], emb, h)
+                # remaining halo rows travel: owner's layer-k cache answers
+                need = is_halo & ~hit
+                h, got, nreq = fetch(states, vids, owner_nodes[k],
+                                     need, h, k)
+                # a halo is valid only if substituted (its local partial
+                # compute never aggregated its remote neighborhood)
+                valid = ((valid & ~is_halo) | hit | got) & maskk
+                hits.append(hit.sum())
+                lookups.append(maskk.sum())
+                halo_seen.append(is_halo.sum())
+                halo_local.append((is_halo & hit).sum())
+                halo_fetched.append(got.sum())
+                halo_requested.append(nreq)
+                captured[k] = (h, valid)
+                return h, valid
+
+            out, valid = fwd(params, h0, valid0,
+                             {"nbr_idx": mb["nbr_idx"]}, dropout=0.0,
+                             seed=jnp.uint32(0), halo_hook=hook)
+            B = mb["seeds"].shape[0]
+            out = out[:B].astype(jnp.float32)
+            hitL, embL = hec_lib.hec_lookup(states[L - 1], vid_o_nodes[L])
+            hitL = hitL & mb["seed_mask"]
+            out = jnp.where(hitL[:, None], embL, out)
+            out_valid = (valid[:B] | hitL) & mb["seed_mask"]
+            hits.append(hitL.sum())
+            lookups.append(mb["seed_mask"].sum())
+
+            # store-back: freshly computed/fetched layer-k embeddings enter
+            # THIS shard's cache keyed by VID_o (fetched halos included)
+            new_states = list(states)
+            for k in range(1, L):
+                h_k, valid_k = captured[k]
+                vids_k = jnp.where(valid_k, vid_o_nodes[k], -1)
+                new_states[k - 1] = hec_lib.hec_store(
+                    new_states[k - 1], vids_k, h_k)
+            vids_L = jnp.where(out_valid, vid_o_nodes[L], -1)
+            new_states[L - 1] = hec_lib.hec_store(new_states[L - 1],
+                                                  vids_L, out)
+            zl = lambda xs: jnp.stack(xs) if xs else jnp.zeros(0, jnp.int32)
+            stats = {
+                "hits": jnp.stack(hits),
+                "lookups": jnp.stack(lookups),
+                "halo_l0": is_halo0.sum(),          # mirror-served features
+                "halo_seen": zl(halo_seen),         # hidden layers only
+                "halo_local": zl(halo_local),
+                "halo_fetched": zl(halo_fetched),
+                "halo_requested": zl(halo_requested),
+            }
+            exp = lambda t: jax.tree_util.tree_map(lambda a: a[None], t)
+            return (exp(out), exp(out_valid), [exp(s) for s in new_states],
+                    exp(stats))
+
+        shard, repl = P("data"), P()
+        smapped = compat.shard_map(
+            stepf, mesh=self.mesh,
+            in_specs=(repl, [shard] * L, shard, shard),
+            out_specs=(shard, shard, [shard] * L, shard))
+        return jax.jit(smapped)
+
+    # -- public API ----------------------------------------------------------
+    def submit(self, vid: int) -> GNNRequest:
+        req = self._admit(vid, len(self.router))
+        self.router.enqueue(req)
+        return req
+
+    def pump(self) -> int:
+        """Serve everything queued; returns shard_map rounds executed."""
+        R = self.num_ranks
+        slots = self.scfg.num_slots
+        ran = 0
+        pending: List[List] = [[] for _ in range(R)]
+        while len(self.router) or any(pending):
+            # fill FULL per-rank microbatches with cache misses: output-cache
+            # hits are answered by the stacked fast-path lookup and never
+            # occupy a compute slot
+            fast: List[List] = [[] for _ in range(R)]
+            for r in range(R):
+                while self.router.queues[r] and len(pending[r]) < slots:
+                    wave = self.router.drain(r, slots - len(pending[r]))
+                    if self.scfg.cache.enabled:
+                        hits, misses = self._split_fast_path(r, wave)
+                        fast[r].extend(hits)
+                        pending[r].extend(misses)
+                    else:
+                        pending[r].extend(wave)
+            for r, misses in enumerate(self._answer_fast_path(fast)):
+                pending[r].extend(misses)   # defensive: mirror out of sync
+            if any(pending):
+                self._run_round([p[:slots] for p in pending])
+                pending = [p[slots:] for p in pending]
+                ran += 1
+        return ran
+
+    def serve(self, vids: Sequence[int]) -> np.ndarray:
+        """Convenience: submit ``vids``, pump, return outputs in order."""
+        reqs = [self.submit(v) for v in vids]
+        self.pump()
+        return np.stack([r.result for r in reqs])
+
+    def update_params(self, params) -> int:
+        """Install a new checkpoint; every shard drops its cache at once."""
+        self.params = params
+        return self.cache.on_model_update()
+
+    def metrics(self) -> dict:
+        out = self.cache.metrics()
+        out.update(self._frontend_metrics(len(self.router)))
+        return out
+
+    # -- internals -----------------------------------------------------------
+    def _split_fast_path(self, rank: int, wave):
+        """Split a wave into (output-cache-resident, needs-compute)."""
+        hits, misses = [], []
+        for entry in wave:
+            (hits if self.cache.output_resident(rank, entry[0].vid)
+             else misses).append(entry)
+        return hits, misses
+
+    def _answer_fast_path(self, fast: List[List]) -> List[List]:
+        """Stacked ``[R, slots]`` lookups answer every output-cache-resident
+        query without sampling or compute; returns per-rank entries the
+        device unexpectedly missed (sent to the compute path, never
+        re-queued — no fast-path livelock)."""
+        misses: List[List] = [[] for _ in range(self.num_ranks)]
+        if not any(fast):
+            return misses
+        L = self.cfg.num_layers
+        slots = self.scfg.num_slots
+        for s in range(0, max(len(f) for f in fast), slots):
+            chunk = [f[s:s + slots] for f in fast]
+            vids = np.full((self.num_ranks, slots), -1, np.int32)
+            for r, lst in enumerate(chunk):
+                vids[r, :len(lst)] = [e[0].vid for e in lst]
+            hit, emb = self._lookup(self.cache.states[L - 1],
+                                    jnp.asarray(vids))
+            hit, emb = np.asarray(hit), np.asarray(emb)
+            for r, lst in enumerate(chunk):
+                for i, entry in enumerate(lst):
+                    if hit[r, i]:       # guaranteed by the residency mirror
+                        self._finish(entry[0], emb[r, i], "output_cache")
+                        self.cache.fast_path_hits += 1
+                    else:
+                        misses[r].append(entry)
+        return misses
+
+    def _run_round(self, round_reqs: List[List]):
+        """Sample every shard's microbatch, run one shard_map serve step."""
+        cfg = self.cfg
+        blocks = []
+        for r in range(self.num_ranks):
+            rng = np.random.default_rng(
+                [self.scfg.sample_seed, self._mb_counter, r])
+            blocks.append(sample_blocks_vectorized(
+                self.ps.parts[r], QueryRouter.seeds_of(round_reqs[r]),
+                cfg.fanouts, rng, self.scfg.num_slots,
+                expandable=self.cache.expandable_masks(r)))
+        self._mb_counter += 1
+        mb = jax.tree_util.tree_map(jnp.asarray, stack_ranks(blocks))
+        states = self.cache.states if self.scfg.cache.enabled \
+            else self.cache.init_states()
+        out, out_valid, new_states, stats = self._step(
+            self.params, states, self.data, mb)
+        out = np.asarray(out)
+        out_valid = np.asarray(out_valid)
+        stats = jax.tree_util.tree_map(np.asarray, stats)
+        self.cache.record(stats["hits"].sum(0), stats["lookups"].sum(0))
+        self.cache.record_halo(stats)
+        if self.scfg.cache.enabled:
+            self.cache.states = new_states
+            self.cache.sync_host()
+        self.steps_run += 1
+        for r, lst in enumerate(round_reqs):
+            for i, (req, _) in enumerate(lst):
+                assert out_valid[r, i], \
+                    f"request {req.rid} (vid {req.vid}) not served"
+                self._finish(req, out[r, i], "compute")

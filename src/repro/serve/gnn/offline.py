@@ -15,8 +15,9 @@ compiled shape; per-layer full-graph activations are O(V * dim).  Used to
   * as the exactness reference for the serving tests/benchmark
     (``direct_forward`` computes the same quantity unchunked).
 
-Single-partition only (``part.num_halo == 0``): offline inference over a
-sharded graph is a follow-up (it needs one halo exchange per layer).
+Single-partition only (``part.num_halo == 0``); the sharded version (one
+halo exchange per layer, bit-matching this one) lives in
+``serve/gnn/distributed/offline.py``.
 """
 from __future__ import annotations
 
@@ -41,11 +42,18 @@ def serve_layer_dims(cfg) -> List[int]:
     return [hid] * (cfg.num_layers - 1) + [cfg.num_classes]
 
 
-def full_neighbor_matrix(part: Partition) -> np.ndarray:
-    """Dense padded neighbor lists ``[S, max_deg]`` (-1 pad) from the CSR."""
+def full_neighbor_matrix(part: Partition,
+                         width: int | None = None) -> np.ndarray:
+    """Dense padded neighbor lists ``[S, width]`` (-1 pad) from the CSR.
+
+    ``width`` defaults to the partition's max degree; the distributed
+    offline engine passes the *global* max degree so every shard reduces
+    over the same padded width — that (plus row-wise chunk ops) is what
+    makes sharded offline inference bit-match the single-rank path."""
     S = part.num_solid
     deg = part.indptr[1:] - part.indptr[:-1]
-    w = max(int(deg.max()) if S else 0, 1)
+    w = width if width is not None else max(int(deg.max()) if S else 0, 1)
+    assert S == 0 or w >= int(deg.max()), (w, int(deg.max()))
     if len(part.indices) == 0:
         return np.full((S, w), -1, np.int64)
     col = np.arange(w)
@@ -88,6 +96,32 @@ def _gat_chunk(z, e_u, e_v, dst, nbr):
     return h.reshape(dst.shape[0], -1)
 
 
+def layer_chunk_outputs(cfg, p_l, h_all, nbr_full: np.ndarray,
+                        chunk_size: int, last: bool):
+    """Yield ``(start, n, out_chunk)`` for one GNN layer over all dst rows.
+
+    The shared inner loop of BOTH offline engines — single-rank (below)
+    and sharded (``distributed/offline.py``).  Their bit-match contract
+    rests on running the exact same chunked device calls; sharing the
+    loop keeps that honest."""
+    S, w = nbr_full.shape
+    if cfg.model == "gat":
+        z, e_u, e_v = _gat_nodes(p_l, h_all)
+    for start in range(0, S, chunk_size):
+        dst = np.full(chunk_size, -1, np.int64)
+        n = min(chunk_size, S - start)
+        dst[:n] = np.arange(start, start + n)
+        nbr = np.full((chunk_size, w), -1, np.int64)
+        nbr[:n] = nbr_full[start:start + n]
+        dst_j = jnp.asarray(dst)
+        nbr_j = jnp.asarray(nbr)
+        if cfg.model == "graphsage":
+            out = _sage_chunk(p_l, h_all, dst_j, nbr_j, relu=not last)
+        else:
+            out = _gat_chunk(z, e_u, e_v, dst_j, nbr_j)
+        yield start, n, out
+
+
 def layerwise_embeddings(cfg, params, part: Partition,
                          chunk_size: int = 2048) -> List[jnp.ndarray]:
     """Exact full-graph embeddings ``[h^1, ..., h^L]`` (each ``[S, d_k]``)."""
@@ -95,30 +129,15 @@ def layerwise_embeddings(cfg, params, part: Partition,
     S = part.num_solid
     L = cfg.num_layers
     nbr_full = full_neighbor_matrix(part)
-    w = nbr_full.shape[1]
     h = jnp.asarray(part.features)
     outs: List[jnp.ndarray] = []
     dims = serve_layer_dims(cfg)
     for l in range(L):
-        p_l = params["layers"][l]
-        last = l == L - 1
-        if cfg.model == "gat":
-            z, e_u, e_v = _gat_nodes(p_l, h)
         nxt = jnp.zeros((S, dims[l]), jnp.float32)
-        for start in range(0, S, chunk_size):
-            dst = np.full(chunk_size, -1, np.int64)
-            n = min(chunk_size, S - start)
-            dst[:n] = np.arange(start, start + n)
-            nbr = np.full((chunk_size, w), -1, np.int64)
-            nbr[:n] = nbr_full[start:start + n]
-            dst_j = jnp.asarray(dst)
-            nbr_j = jnp.asarray(nbr)
-            if cfg.model == "graphsage":
-                out = _sage_chunk(p_l, h, dst_j, nbr_j, relu=not last)
-            else:
-                out = _gat_chunk(z, e_u, e_v, dst_j, nbr_j)
-            safe = jnp.where(dst_j >= 0, dst_j, S)   # pad rows drop
-            nxt = nxt.at[safe].set(out.astype(jnp.float32), mode="drop")
+        for start, n, out in layer_chunk_outputs(
+                cfg, params["layers"][l], h, nbr_full, chunk_size,
+                last=l == L - 1):
+            nxt = nxt.at[start:start + n].set(out[:n].astype(jnp.float32))
         h = nxt
         outs.append(h)
     return outs

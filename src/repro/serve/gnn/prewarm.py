@@ -1,0 +1,91 @@
+"""Cache pre-warm policies: which vertices deserve offline embeddings.
+
+Pre-warming stores offline (exact, layer-wise) embeddings into the serving
+cache before traffic arrives; with a finite cache the question is *which*
+vertices.  Two policies, replacing the caller-provided vid lists the
+PR 2 subsystem required:
+
+  * **degree-weighted** — highest-degree vertices first.  On power-law
+    graphs hubs appear in a disproportionate share of sampled
+    neighborhoods (a vertex's appearance rate in ego-nets grows with its
+    degree), so caching hubs buys the largest expected leaf-rate per
+    cache line.  Needs no workload knowledge: the right default.
+  * **query-log-driven** — most-frequently-queried vertices first, from a
+    recorded vid log.  Warms exactly the observed working set (repeat
+    queries become output-cache fast-path answers), when a log exists.
+
+Both return VID_o arrays for ``warm_cache`` (single-rank) /
+``ShardedServingCache.warm`` (each vid lands on its owner shard);
+``prewarm`` runs the matching offline engine end-to-end.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.graph.partition import Partition, PartitionSet
+
+
+def degree_weighted_vids(part: Partition, k: Optional[int] = None,
+                         frac: float = 0.25) -> np.ndarray:
+    """Top-``k`` (default ``frac`` of the partition) solid VID_o by degree,
+    ties broken by vid for determinism."""
+    deg = part.indptr[1:] - part.indptr[:-1]
+    if k is None:
+        k = max(1, int(round(part.num_solid * frac)))
+    order = np.lexsort((part.solid_vids, -deg))
+    return np.sort(part.solid_vids[order[:k]])
+
+
+def query_log_vids(log: Sequence[int], k: Optional[int] = None,
+                   frac: float = 1.0) -> np.ndarray:
+    """Most-frequently-queried VID_o first (ties by vid), top ``k``."""
+    vids, counts = np.unique(np.asarray(log, np.int64), return_counts=True)
+    if k is None:
+        k = max(1, int(round(len(vids) * frac)))
+    order = np.lexsort((vids, -counts))
+    return np.sort(vids[order[:k]])
+
+
+def select_prewarm_vids(parts: Sequence[Partition], policy: str = "degree",
+                        frac: Optional[float] = None,
+                        query_log: Optional[Sequence[int]] = None
+                        ) -> np.ndarray:
+    """Policy dispatch over one or many partitions (per-shard balanced:
+    degree selection takes the top ``frac`` of EACH shard's solids).
+
+    ``frac=None`` selects the policy's own default: 0.25 for degree (a
+    hub slice), 1.0 for query_log (the WHOLE observed working set — the
+    policy exists to make every logged repeat a fast-path answer)."""
+    if policy == "degree":
+        return np.concatenate(
+            [degree_weighted_vids(p, frac=0.25 if frac is None else frac)
+             for p in parts])
+    if policy == "query_log":
+        if query_log is None or not len(query_log):
+            raise ValueError("query_log policy needs a non-empty vid log")
+        return query_log_vids(query_log, frac=1.0 if frac is None else frac)
+    raise ValueError(f"unknown prewarm policy {policy!r} "
+                     f"(expected 'degree' or 'query_log')")
+
+
+def prewarm(srv, policy: str = "degree", frac: Optional[float] = None,
+            query_log: Optional[Sequence[int]] = None,
+            chunk_size: int = 2048) -> int:
+    """Offline inference + policy-selected cache warm, for either
+    scheduler (``GNNServeScheduler`` or ``DistGNNServeScheduler``).
+    Returns the number of vertices warmed per layer."""
+    ps = getattr(srv, "ps", None)
+    if isinstance(ps, PartitionSet):        # sharded scheduler
+        from repro.serve.gnn.distributed.offline import \
+            layerwise_embeddings_dist
+        vids = select_prewarm_vids(ps.parts, policy, frac, query_log)
+        embs = layerwise_embeddings_dist(srv.cfg, srv.params, ps,
+                                         chunk_size=chunk_size)
+        return srv.cache.warm(embs, vids)
+    from repro.serve.gnn.offline import layerwise_embeddings, warm_cache
+    vids = select_prewarm_vids([srv.part], policy, frac, query_log)
+    embs = layerwise_embeddings(srv.cfg, srv.params, srv.part,
+                                chunk_size=chunk_size)
+    return warm_cache(srv.cache, embs, vids)

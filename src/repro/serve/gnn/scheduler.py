@@ -27,12 +27,19 @@ always backed by a device hit — OCF eviction can never strand a leaf.
 
 ``update_params`` installs a new checkpoint and bumps the cache's model
 version, dropping every cached embedding (they are functions of the
-parameters).  Single-partition serving; multi-rank sharded serving is a
-ROADMAP follow-up.
+parameters).  Single-partition serving; the sharded multi-rank path
+(owner routing + serve-side halo all_to_all) lives in
+``serve/gnn/distributed/``.
+
+Admission control: ``max_queue_depth`` caps the request queue — ``submit``
+raises ``AdmissionRejected`` (the query is rejected with immediate
+backpressure, never silently dropped) and per-request enqueue->answer
+latency is tracked with p50/p99 in ``metrics()``.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import List, Optional, Sequence
 
@@ -55,6 +62,45 @@ class GNNServeConfig:
     cache: ServeCacheConfig = dataclasses.field(
         default_factory=ServeCacheConfig)
     sample_seed: int = 0           # base seed of the per-microbatch RNG
+    max_queue_depth: Optional[int] = None  # admission cap; None = unbounded
+
+
+class AdmissionRejected(RuntimeError):
+    """Raised by ``submit`` when the queue is at ``max_queue_depth``.
+
+    The query is *rejected*, never silently dropped: the caller gets the
+    backpressure signal immediately (retry / shed upstream) instead of an
+    unbounded enqueue->answer latency tail."""
+
+
+class LatencyStats:
+    """Per-request enqueue->answer latency accumulator (p50/p99 metrics).
+
+    Keeps a bounded window of the most recent ``window`` samples (plus a
+    lifetime count), so a long-running server neither grows memory nor
+    pays an ever-larger percentile sort in ``metrics()``."""
+
+    def __init__(self, window: int = 8192):
+        self.samples: deque = deque(maxlen=window)
+        self.count = 0
+
+    def observe(self, seconds: float):
+        self.samples.append(seconds)
+        self.count += 1
+
+    def reset(self):
+        self.samples.clear()
+        self.count = 0
+
+    def metrics(self, prefix: str = "latency") -> dict:
+        if not self.samples:
+            return {f"{prefix}_count": self.count, f"{prefix}_p50_ms": 0.0,
+                    f"{prefix}_p99_ms": 0.0, f"{prefix}_mean_ms": 0.0}
+        a = np.asarray(self.samples, np.float64) * 1e3
+        return {f"{prefix}_count": self.count,
+                f"{prefix}_p50_ms": float(np.percentile(a, 50)),
+                f"{prefix}_p99_ms": float(np.percentile(a, 99)),
+                f"{prefix}_mean_ms": float(a.mean())}
 
 
 @dataclasses.dataclass
@@ -64,13 +110,63 @@ class GNNRequest:
     result: Optional[np.ndarray] = None   # [num_classes] once served
     model_version: int = -1               # version that served it
     served_by: str = ""                   # "output_cache" | "compute"
+    t_submit: float = 0.0                 # perf_counter at enqueue
+    t_done: float = 0.0                   # perf_counter at answer
 
     @property
     def done(self) -> bool:
         return self.result is not None
 
 
-class GNNServeScheduler:
+class ServeFrontend:
+    """Request lifecycle shared by the single-rank and sharded schedulers:
+    admission control, latency stamping, served/rejected counters."""
+
+    def _init_frontend(self):
+        self._rid = 0
+        self._mb_counter = 0
+        self.latency = LatencyStats()
+        self.reset_frontend()
+
+    def reset_frontend(self):
+        """Zero steps/served/rejected counters and the latency window —
+        call between measurement passes (request ids keep advancing and
+        queued requests are untouched)."""
+        self.steps_run = 0
+        self.queries_served = 0
+        self.queries_rejected = 0
+        self.latency.reset()
+
+    def _admit(self, vid: int, queue_depth: int) -> GNNRequest:
+        """Admission-checked request creation (raises when over the cap)."""
+        cap = self.scfg.max_queue_depth
+        if cap is not None and queue_depth >= cap:
+            self.queries_rejected += 1
+            raise AdmissionRejected(
+                f"queue at max_queue_depth={cap}; query {int(vid)} rejected")
+        req = GNNRequest(rid=self._rid, vid=int(vid),
+                         t_submit=time.perf_counter())
+        self._rid += 1
+        return req
+
+    def _finish(self, req: GNNRequest, result: np.ndarray, served_by: str):
+        req.result = result
+        req.model_version = self.cache.model_version
+        req.served_by = served_by
+        req.t_done = time.perf_counter()
+        self.latency.observe(req.t_done - req.t_submit)
+        self.queries_served += 1
+
+    def _frontend_metrics(self, queue_depth: int) -> dict:
+        out = {"steps_run": self.steps_run,
+               "queries_served": self.queries_served,
+               "queries_rejected": self.queries_rejected,
+               "queue_depth": queue_depth}
+        out.update(self.latency.metrics())
+        return out
+
+
+class GNNServeScheduler(ServeFrontend):
     def __init__(self, cfg, params, part: Partition,
                  serve_cfg: Optional[GNNServeConfig] = None):
         assert part.num_halo == 0, "serving is single-partition"
@@ -82,10 +178,7 @@ class GNNServeScheduler:
         self.cache = ServingCache(serve_layer_dims(cfg), part.num_solid,
                                   self.scfg.cache)
         self.queue: deque[GNNRequest] = deque()
-        self._rid = 0
-        self._mb_counter = 0
-        self.steps_run = 0
-        self.queries_served = 0
+        self._init_frontend()
         self._step = self._build_step()
         self._lookup = jax.jit(
             lambda state, vids: hec_lib.hec_lookup(state, vids))
@@ -168,8 +261,7 @@ class GNNServeScheduler:
 
     # -- public API ----------------------------------------------------------
     def submit(self, vid: int) -> GNNRequest:
-        req = GNNRequest(rid=self._rid, vid=int(vid))
-        self._rid += 1
+        req = self._admit(vid, len(self.queue))
         self.queue.append(req)
         return req
 
@@ -206,8 +298,7 @@ class GNNServeScheduler:
 
     def metrics(self) -> dict:
         out = self.cache.metrics()
-        out.update(steps_run=self.steps_run,
-                   queries_served=self.queries_served)
+        out.update(self._frontend_metrics(len(self.queue)))
         return out
 
     # -- internals -----------------------------------------------------------
@@ -226,11 +317,8 @@ class GNNServeScheduler:
             hit, emb = np.asarray(hit), np.asarray(emb)
             for i, r in enumerate(candidates):
                 if hit[i]:              # guaranteed by the residency mirror
-                    r.result = emb[i]
-                    r.model_version = self.cache.model_version
-                    r.served_by = "output_cache"
+                    self._finish(r, emb[i], "output_cache")
                     self.cache.fast_path_hits += 1
-                    self.queries_served += 1
                 else:                   # defensive: mirror out of sync
                     misses.append(r)
         return misses
@@ -256,7 +344,4 @@ class GNNServeScheduler:
         self.steps_run += 1
         for i, r in enumerate(reqs):
             assert out_valid[i], f"request {r.rid} (vid {r.vid}) not served"
-            r.result = out[i]
-            r.model_version = self.cache.model_version
-            r.served_by = "compute"
-            self.queries_served += 1
+            self._finish(r, out[i], "compute")

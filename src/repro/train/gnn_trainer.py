@@ -72,13 +72,33 @@ def build_dist_data(ps: PartitionSet, cfg: GNNConfig) -> dict:
     for i in range(R):
         for j in range(R):
             db_halo[i, j, :len(dbs[i][j])] = dbs[i][j]
+    svids, sidx = solid_lookup_tables(ps)
     return {
         "features": jnp.asarray(feats),
         "labels": jnp.asarray(labels),
         "num_solid": jnp.asarray(num_solid),
         "vid_o": jnp.asarray(vid_o),
         "db_halo": jnp.asarray(db_halo),
+        "solid_sorted_vids": jnp.asarray(svids),
+        "solid_sorted_idx": jnp.asarray(sidx),
     }
+
+
+def solid_lookup_tables(ps: PartitionSet):
+    """Per-rank sorted owner tables: ``(vids [R, Smax], idx [R, Smax])``.
+
+    ``vids[r]`` is rank r's solid VID_o sorted ascending (sentinel-padded);
+    ``idx[r]`` the matching solid VID_p via ``PartitionSet.route`` — so any
+    rank can answer "which feature/embedding row is VID_o v?" with one
+    searchsorted + gather.  Shared by the trainer's sync-mode fetch and the
+    serve-side halo gather."""
+    svids, sidx = [], []
+    for p in ps.parts:
+        vs = np.sort(p.solid_vids)
+        _, li = ps.route(vs)
+        svids.append(vs.astype(np.int32))
+        sidx.append(li.astype(np.int32))
+    return (_pad_stack(svids, _SENTINEL), _pad_stack(sidx, 0))
 
 
 def sample_step(ps: PartitionSet, cfg: GNNConfig, seed_lists, rng) -> dict:
@@ -383,14 +403,12 @@ class DistTrainer:
         req = jnp.broadcast_to(req_row, (R, nc))
         pos_row = jnp.where(ok, topi, 0)
         got_req = jax.lax.all_to_all(req, "data", 0, 0)     # [R_from, nc]
-        S = data["features"].shape[0]
-        solid_vids = jnp.where(jnp.arange(S) < data["num_solid"],
-                               data["vid_o"][:S], _SENTINEL)
-        order = jnp.argsort(solid_vids)
-        sorted_vids = solid_vids[order]
+        sorted_vids = data["solid_sorted_vids"]
+        S = sorted_vids.shape[0]
         loc = jnp.clip(jnp.searchsorted(sorted_vids, got_req), 0, S - 1)
         own = (sorted_vids[loc] == got_req) & (got_req >= 0)
-        feats = data["features"][order[loc]] * own[..., None]
+        feats = data["features"][data["solid_sorted_idx"][loc]] \
+            * own[..., None]
         resp = jax.lax.all_to_all(
             jnp.concatenate([feats, own[..., None].astype(jnp.float32)], -1),
             "data", 0, 0)                                   # [R, nc, F+1]

@@ -12,10 +12,10 @@ import pytest
 
 from repro.configs.gnn import small_gnn_config
 from repro.graph import partition_graph, synthetic_graph
-from repro.serve.gnn import (GNNServeConfig, GNNServeScheduler,
-                             ServeCacheConfig, direct_forward,
-                             layerwise_embeddings, serve_layer_dims,
-                             warm_cache)
+from repro.serve.gnn import (AdmissionRejected, GNNServeConfig,
+                             GNNServeScheduler, ServeCacheConfig,
+                             direct_forward, layerwise_embeddings,
+                             serve_layer_dims, warm_cache)
 from repro.train.gnn_trainer import init_model_params
 
 
@@ -112,6 +112,44 @@ def test_stale_cache_invalidated_on_model_version_bump(part):
     fresh = make_server(cfg, p2, part).serve(vids)
     np.testing.assert_allclose(out_new, fresh, atol=1e-5, rtol=1e-5)
     assert not np.allclose(out_new, out_old, atol=1e-3)
+
+
+def test_admission_cap_rejects_not_drops(part):
+    """A full queue rejects new submits with backpressure (AdmissionRejected)
+    and never displaces an admitted query; draining re-admits."""
+    cfg = make_cfg(part, "graphsage")
+    params = init_model_params(jax.random.key(0), cfg)
+    srv = GNNServeScheduler(
+        cfg, params, part,
+        GNNServeConfig(num_slots=8,
+                       cache=ServeCacheConfig(cache_size=8192, ways=4),
+                       max_queue_depth=4))
+    reqs = [srv.submit(v) for v in range(4)]
+    with pytest.raises(AdmissionRejected):
+        srv.submit(99)
+    assert srv.queries_rejected == 1
+    srv.pump()
+    assert all(r.done for r in reqs)       # rejection displaced nothing
+    srv.submit(99)                         # queue drained -> admitted again
+    srv.pump()
+    m = srv.metrics()
+    assert m["queries_rejected"] == 1
+    assert m["queries_served"] == 5
+
+
+def test_latency_accounting(part):
+    cfg = make_cfg(part, "graphsage")
+    params = init_model_params(jax.random.key(0), cfg)
+    srv = make_server(cfg, params, part)
+    vids = np.arange(24)
+    srv.serve(vids)
+    srv.serve(vids)                        # repeat pass: fast-path answers
+    m = srv.metrics()
+    assert m["latency_count"] == 2 * len(vids)
+    assert m["latency_p99_ms"] >= m["latency_p50_ms"] > 0.0
+    req = srv.submit(0)
+    srv.pump()
+    assert req.t_done >= req.t_submit > 0.0
 
 
 def test_cache_leaves_never_expand(part):
