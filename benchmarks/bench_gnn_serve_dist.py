@@ -45,11 +45,11 @@ import os, sys, json, time
 R = int(sys.argv[1]); V = int(sys.argv[2]); Q = int(sys.argv[3])
 os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={R}"
 import jax, numpy as np
+from repro.cache import ServeCacheConfig       # the unified cache (PR 4)
 from repro.configs.gnn import small_gnn_config
 from repro.graph import partition_graph, synthetic_graph
 from repro.launch.mesh import make_gnn_mesh
-from repro.serve.gnn import (GNNServeConfig, GNNServeScheduler,
-                             ServeCacheConfig, prewarm)
+from repro.serve.gnn import GNNServeConfig, GNNServeScheduler, prewarm
 from repro.serve.gnn.distributed import DistGNNServeScheduler, DistServeConfig
 from repro.train.gnn_trainer import init_model_params
 

@@ -21,6 +21,7 @@ cs, ls = int(sys.argv[1]), int(sys.argv[2])
 V = int(sys.argv[3]) if len(sys.argv) > 3 else 6000
 os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={R}"
 import jax, numpy as np
+from repro.cache import hec_occupancy          # the unified cache (PR 4)
 from repro.configs.gnn import HECConfig, small_gnn_config
 from repro.graph import partition_graph, synthetic_graph
 from repro.launch.mesh import make_gnn_mesh
@@ -39,7 +40,8 @@ state, hist = tr.train_epochs(ps, dd, state, 3)
 rates = [hist[-1].get(f"hec_hits_l{l}", 0) /
          max(hist[-1].get(f"hec_halos_l{l}", 1), 1)
          for l in range(cfg.num_layers)]
-print("RESULT" + json.dumps({"rates": rates}))
+occ = [float(hec_occupancy(h)) for h in state["hec"]]
+print("RESULT" + json.dumps({"rates": rates, "occ": occ}))
 """
 
 
@@ -61,7 +63,8 @@ def main(smoke=False):
     for cs, ls in sweep:
         r = run(cs, ls, vertices)
         rates = ";".join(f"l{i}={x:.2f}" for i, x in enumerate(r["rates"]))
-        emit(f"hec_hitrate_cs{cs}_ls{ls}", 0.0, rates)
+        occ = ";".join(f"occ{i}={x:.2f}" for i, x in enumerate(r["occ"]))
+        emit(f"hec_hitrate_cs{cs}_ls{ls}", 0.0, rates + ";" + occ)
 
 
 if __name__ == "__main__":

@@ -6,6 +6,7 @@ Prints ``name,us_per_call,derived`` CSV lines.
   fig3/4 bench_scaling      epoch time/speedup vs ranks (Figs. 3 & 4)
   fig5   bench_distdgl      DistGNN-MB vs DistDGL-like baseline (Fig. 5)
   hec    bench_hec          HEC hit-rates (paper §4.4)
+  comm   bench_comm         exchange plans + fused/overlapped AEP push
   table3 bench_convergence  convergence parity (Table 3 / §4.5)
   pipeline bench_pipeline   vectorized sampler + async prefetch (§3.3/§3.4)
   gnn_serve bench_gnn_serve inference serving: cold vs pre-warmed cache
@@ -28,14 +29,16 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-scale pass over every suite (CI)")
     args = ap.parse_args()
-    from benchmarks import (bench_convergence, bench_distdgl, bench_gnn_serve,
-                            bench_gnn_serve_dist, bench_hec, bench_pipeline,
-                            bench_scaling, bench_update, roofline)
+    from benchmarks import (bench_comm, bench_convergence, bench_distdgl,
+                            bench_gnn_serve, bench_gnn_serve_dist, bench_hec,
+                            bench_pipeline, bench_scaling, bench_update,
+                            roofline)
     suites = {
         "fig2_update": bench_update.main,
         "fig3_fig4_scaling": bench_scaling.main,
         "fig5_distdgl": bench_distdgl.main,
         "hec_hitrates": bench_hec.main,
+        "comm": bench_comm.main,
         "table3_convergence": bench_convergence.main,
         "pipeline": bench_pipeline.main,
         "gnn_serve": bench_gnn_serve.main,

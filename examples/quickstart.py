@@ -8,11 +8,13 @@ chip and XLA_FLAGS is not needed)
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 
+import time
+
 import jax
 
 from repro.configs.gnn import small_gnn_config
 from repro.graph import partition_graph, synthetic_graph
-from repro.launch.mesh import make_gnn_mesh
+from repro.launch.mesh import ICI_BW, make_gnn_mesh
 from repro.train.gnn_trainer import DistTrainer, build_dist_data
 
 RANKS = 4
@@ -40,10 +42,29 @@ def main():
     # 4. train + evaluate — minibatches flow through the async pipeline
     # (repro.pipeline: vectorized sampler + prefetch + staged transfers;
     # cfg.pipeline tunes it, pipeline=None falls back to synchronous)
+    t0 = time.perf_counter()
     state, hist = trainer.train_epochs(ps, dd, state, num_epochs=5,
                                        log_every=1)
+    train_s = time.perf_counter() - t0
     acc = trainer.evaluate(ps, dd, state)
     print(f"test accuracy: {acc:.3f}")
+
+    # 5. AEP overlap metrics (HaloExchangeEngine, paper §3.4/§4.4): the
+    # push is dispatched between forward and backward, so its latency
+    # hides under backward compute — the paper's Table-style numbers
+    steps = max(int(state["step"]), 1)
+    m = hist[-1]
+    push_b = m.get("aep_push_bytes", 0.0)       # cluster-wide, per step
+    push_rows = m.get("aep_push_rows", 0.0)
+    step_s = train_s / steps                    # incl. first-step compile
+    # per-device wire time: the psum'ed payload splits across R links
+    push_s = push_b / RANKS / ICI_BW
+    hidden = min(push_s, max(step_s - push_s, 0.0)) / push_s if push_b else 0.0
+    print(f"AEP overlap: {push_rows:.0f} embeddings / {push_b / 1e3:.1f} kB "
+          f"per step dispatched behind the backward pass "
+          f"({push_b * steps / 1e6:.1f} MB overlapped over the run); "
+          f"modeled push latency hidden: {hidden * 100:.0f}% "
+          f"(push {push_s * 1e6:.2f}us/device vs step {step_s * 1e3:.1f}ms)")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,15 @@
+"""Unified embedding-cache subsystem (PR 4).
+
+Every cache state transition in the repo — training HECs, single-rank
+serving, sharded serving — is defined once, in ``repro.cache.hec``.
+``repro.core.hec`` re-exports the functional ops for compatibility;
+``repro.serve.gnn`` keeps thin policy wrappers over ``EmbeddingCache``.
+"""
+from repro.cache.hec import (EmbeddingCache, HECState, ServeCacheConfig,
+                             hec_init, hec_load, hec_lookup, hec_occupancy,
+                             hec_search, hec_store, hec_tick)
+
+__all__ = [
+    "EmbeddingCache", "HECState", "ServeCacheConfig", "hec_init", "hec_load",
+    "hec_lookup", "hec_occupancy", "hec_search", "hec_store", "hec_tick",
+]

@@ -1,0 +1,383 @@
+"""The ONE Historical Embedding Cache (paper §3.2) — functional core +
+the unified per-layer cache object every consumer shares.
+
+The paper's HEC is an OpenMP hash table with global oldest-cache-line-first
+(OCF) replacement.  The TPU adaptation is a *set-associative* cache over
+dense tensors (tags / age / values), searched with a vectorized
+hash -> set -> way-compare, replaced OCF *within the set*:
+
+    state.tags   [nsets, ways] int32   VID_o tag, -1 = empty
+    state.age    [nsets, ways] int32   iterations since fill
+    state.values [nsets, ways, dim]    the historical embedding
+
+Semantics preserved from the paper:
+  * cs = nsets*ways fixed entries; tags are original vertex IDs (VID_o)
+  * life-span ls: lines with age > ls are purged (hec_tick, once/iteration)
+  * replacement: matching tag > empty way > oldest way (OCF)
+  * HECSearch / HECLoad / HECStore are the three management ops
+  * loads are stop_gradient'ed: historical embeddings are constants
+    (bounded staleness, no gradient flow — same as GNNAutoScale/Sancus)
+
+All ops are jnp-vectorized and run inside jit / shard_map (one HEC per rank
+per GNN layer, exactly as in the paper).  ``kernels/hec_search.py`` is the
+Pallas lookup primitive for the same layout (kept in sync with
+``_set_index`` below).
+
+Cache **state transitions live only in this module**.  On top of the
+functional ops, :class:`EmbeddingCache` is the superset of every cache the
+repo used to carry separately (training HECs, the single-rank serving
+cache, the sharded serving cache): per-layer states, optional ``[R, ...]``
+rank stacking, VID_o tags, a host residency mirror, model-version
+invalidation, and hit/occupancy/halo metrics.  ``serve/gnn`` keeps thin
+policy wrappers (``ServingCache``, ``ShardedServingCache``) over it.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_MIX = jnp.uint32(0x9E3779B1)     # Fibonacci hashing multiplier
+
+
+# ---------------------------------------------------------------------------
+# functional core: the three management ops over one HECState
+# ---------------------------------------------------------------------------
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class HECState:
+    tags: jnp.ndarray      # [nsets, ways] int32
+    age: jnp.ndarray       # [nsets, ways] int32
+    values: jnp.ndarray    # [nsets, ways, dim]
+
+    @property
+    def nsets(self):
+        return self.tags.shape[0]
+
+    @property
+    def ways(self):
+        return self.tags.shape[1]
+
+
+def hec_init(cache_size: int, ways: int, dim: int,
+             dtype=jnp.float32) -> HECState:
+    assert cache_size % ways == 0
+    nsets = cache_size // ways
+    return HECState(
+        tags=jnp.full((nsets, ways), -1, jnp.int32),
+        age=jnp.zeros((nsets, ways), jnp.int32),
+        values=jnp.zeros((nsets, ways, dim), dtype))
+
+
+def _set_index(vids: jnp.ndarray, nsets: int) -> jnp.ndarray:
+    h = (vids.astype(jnp.uint32) * _MIX) >> jnp.uint32(8)
+    return (h % jnp.uint32(nsets)).astype(jnp.int32)
+
+
+def hec_tick(state: HECState, life_span: int) -> HECState:
+    """Advance one iteration: age lines, purge those older than ls."""
+    age = state.age + 1
+    expired = age > life_span
+    return HECState(
+        tags=jnp.where(expired, -1, state.tags),
+        age=jnp.where(expired, 0, age),
+        values=state.values)
+
+
+def hec_store(state: HECState, vids: jnp.ndarray, embs: jnp.ndarray,
+              valid: jnp.ndarray | None = None) -> HECState:
+    """Scatter embeddings into the cache.
+
+    vids [n] int32 (VID_o); embs [n, dim]; valid [n] bool.  Way choice per
+    entry: matching tag, else an empty way, else the oldest (OCF).  When two
+    batch entries collide on the same (set, way) the later scatter wins —
+    acceptable (both are fresh embeddings of equal standing).
+    """
+    if valid is None:
+        valid = vids >= 0
+    nsets, ways = state.tags.shape
+    n = vids.shape[0]
+    s = _set_index(vids, nsets)                       # [n]
+    set_tags = state.tags[s]                          # [n, ways]
+    set_age = state.age[s]
+    match = set_tags == vids[:, None]
+    empty = set_tags < 0
+    oldest = jnp.argmax(set_age, axis=1)
+    first_empty = jnp.argmax(empty, axis=1)
+    way = jnp.where(match.any(1), jnp.argmax(match, axis=1),
+                    jnp.where(empty.any(1), first_empty, oldest))
+    # de-conflict ways for same-set entries WITHIN this batch: the r-th
+    # batch entry landing in a set takes (way + r) % ways, so up to `ways`
+    # same-set entries occupy distinct lines (beyond that: last-write-wins)
+    order = jnp.argsort(s)
+    s_sorted = s[order]
+    first_pos = jnp.searchsorted(s_sorted, s_sorted, side="left")
+    rank_sorted = jnp.arange(n) - first_pos
+    rank = jnp.zeros(n, rank_sorted.dtype).at[order].set(rank_sorted)
+    way = (way + rank) % ways
+    # invalid entries scatter out-of-bounds and are dropped
+    s_safe = jnp.where(valid, s, nsets)
+    tags = state.tags.at[s_safe, way].set(vids.astype(jnp.int32), mode="drop")
+    age = state.age.at[s_safe, way].set(0, mode="drop")
+    vals = state.values.at[s_safe, way].set(
+        embs.astype(state.values.dtype), mode="drop")
+    return HECState(tags=tags, age=age, values=vals)
+
+
+def hec_search(state: HECState, vids: jnp.ndarray):
+    """vids [m] -> (hit [m] bool, set_idx [m], way_idx [m])."""
+    nsets, _ = state.tags.shape
+    s = _set_index(vids, nsets)
+    match = state.tags[s] == vids[:, None]
+    valid = vids >= 0
+    hit = match.any(axis=1) & valid
+    way = jnp.argmax(match, axis=1)
+    return hit, s, way
+
+
+def hec_load(state: HECState, set_idx: jnp.ndarray, way_idx: jnp.ndarray):
+    """Gather embeddings at (set, way); stop_gradient (historical)."""
+    return jax.lax.stop_gradient(state.values[set_idx, way_idx])
+
+
+def hec_lookup(state: HECState, vids: jnp.ndarray):
+    """Convenience: (hit [m], emb [m, dim]) with misses zeroed."""
+    hit, s, w = hec_search(state, vids)
+    emb = hec_load(state, s, w)
+    return hit, jnp.where(hit[:, None], emb, 0.0)
+
+
+def hec_occupancy(state: HECState) -> jnp.ndarray:
+    return (state.tags >= 0).mean()
+
+
+# ---------------------------------------------------------------------------
+# the unified cache object (per-layer states + host mirror + metrics)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ServeCacheConfig:
+    """Serving-cache parameters (per layer; mirrors training ``HECConfig``)."""
+    cache_size: int = 32768        # entries per layer
+    ways: int = 8                  # set-associativity
+    enabled: bool = True           # False: serve every query by full compute
+
+    def __post_init__(self):
+        assert self.cache_size % self.ways == 0
+
+
+class EmbeddingCache:
+    """Per-layer HEC states + host residency mirror + counters.
+
+    The superset of the repo's cache variants, selected by construction:
+
+      * ``ps=None`` — ONE state per layer, tags in the local vertex id
+        space (single-partition serving),
+      * ``ps=PartitionSet`` — states stacked ``[R, ...]`` on a leading rank
+        axis (shardable on the mesh's ``data`` axis, exactly how the
+        trainer stacks its HECs), tags are **VID_o** so a shard can cache
+        embeddings of vertices it does *not* own (fetched halos stop
+        traveling), plus per-shard residency mirrors and halo counters.
+
+    Shared semantics:
+
+      * no life-span ticks: entries stay valid until evicted (OCF within a
+        set) or dropped by a model-version bump (``on_model_update`` —
+        cached embeddings are functions of the parameters, so a new
+        checkpoint makes them all stale at once),
+      * the **host residency mirror** is rebuilt from the authoritative
+        device tags after every store batch (``sync_host``), and all
+        lookups of a microbatch precede all of its stores — so a sampling
+        leaf decided from the mirror is always backed by a device hit,
+      * hit/miss/occupancy (and, stacked, halo-gather) counters.
+    """
+
+    def __init__(self, dims: Sequence[int], num_vertices: int,
+                 cfg: Optional[ServeCacheConfig] = None, ps=None):
+        self.cfg = cfg or ServeCacheConfig()
+        self.dims = list(dims)                 # dims of h^1 .. h^L
+        self.num_vertices = num_vertices       # tag space (global V if ps)
+        self.ps = ps
+        self.num_ranks = ps.num_parts if ps is not None else None
+        self.model_version = 0
+        if ps is not None:
+            self._vid_p_to_o = [p.vid_p_to_o() for p in ps.parts]
+            self._vstore = jax.jit(jax.vmap(hec_store))
+        self._reset_states()
+        self.hits = np.zeros(len(dims), np.int64)
+        self.lookups = np.zeros(len(dims), np.int64)
+        self.fast_path_hits = 0                # queries answered w/o compute
+        self.halo_seen = 0          # halo rows at hidden layers (h^k needed)
+        self.halo_local = 0         # answered from the local shard's cache
+        self.halo_fetched = 0       # answered by the owner via all_to_all
+        self.halo_requested = 0     # rows that actually traveled
+        self.halo_l0 = 0            # layer-0 rows served by the feature mirror
+
+    # -- state lifecycle ------------------------------------------------------
+    @property
+    def stacked(self) -> bool:
+        return self.num_ranks is not None
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.dims)
+
+    def init_states(self) -> List[HECState]:
+        """Fresh (empty) states — also the disabled-cache baseline."""
+        c = self.cfg
+        if self.stacked:
+            return [jax.vmap(lambda _: hec_init(c.cache_size, c.ways, d))(
+                jnp.arange(self.num_ranks)) for d in self.dims]
+        return [hec_init(c.cache_size, c.ways, d) for d in self.dims]
+
+    def _reset_states(self):
+        self.states = self.init_states()
+        shape = (self.num_ranks, self.num_vertices) if self.stacked \
+            else (self.num_vertices,)
+        self.resident = [np.zeros(shape, bool) for _ in self.dims]
+
+    # -- residency mirror ----------------------------------------------------
+    def sync_host(self):
+        """Rebuild the host residency flags from the device tags.
+
+        Called after every store batch; between a sync and the next store
+        the flags are exact, so sampling decisions made from them are
+        always backed by a device hit."""
+        V = self.num_vertices
+        for k, st in enumerate(self.states):
+            tags = np.asarray(st.tags)
+            if self.stacked:
+                tags = tags.reshape(self.num_ranks, -1)
+                flags = np.zeros((self.num_ranks, V), bool)
+                for r in range(self.num_ranks):
+                    t = tags[r][(tags[r] >= 0) & (tags[r] < V)]
+                    flags[r, t] = True
+            else:
+                tags = tags.ravel()
+                flags = np.zeros(V, bool)
+                flags[tags[(tags >= 0) & (tags < V)]] = True
+            self.resident[k] = flags
+
+    def expandable_masks(self, rank: Optional[int] = None) \
+            -> List[Optional[np.ndarray]]:
+        """``expandable[k]`` for ``sample_blocks_vectorized``: a node at
+        layer ``k`` is a leaf iff its ``h^k`` is cache-resident.  Stacked
+        caches pass ``rank``: the masks are over that shard's VID_p space
+        (halos are leaves regardless; a resident halo additionally skips
+        the wire)."""
+        if not self.cfg.enabled:
+            return [None] * (self.num_layers + 1)
+        if rank is None:
+            assert not self.stacked, "stacked cache needs a shard rank"
+            return [None] + [~r for r in self.resident]
+        vo = self._vid_p_to_o[rank]
+        return [None] + [~r[rank][vo] for r in self.resident]
+
+    def output_resident(self, rank: int, vid_o: int) -> bool:
+        """Router fast path: is the final-layer embedding on the owner?"""
+        assert self.stacked, "output_resident is per-shard (stacked only)"
+        return bool(self.resident[self.num_layers - 1][rank, vid_o])
+
+    # -- warm / store ---------------------------------------------------------
+    def warm(self, embeddings: Sequence, vids, chunk: int = 4096,
+             layers: Optional[Sequence[int]] = None) -> int:
+        """Store offline embeddings of ``vids``; returns vertices stored
+        per layer.  ``layers`` restricts which cache layers are warmed
+        (default: all) — warming only the hidden layers keeps queries on
+        the compute path while making every halo gather answerable.
+        Stacked caches route each vertex to its owner shard first."""
+        layer_set = set(range(len(self.dims))) if layers is None \
+            else set(layers)
+        vids = np.asarray(vids, np.int64)
+        if not self.stacked:
+            for k, emb in enumerate(embeddings):
+                if k not in layer_set:
+                    continue
+                st = self.states[k]
+                for s in range(0, len(vids), chunk):
+                    v = vids[s:s + chunk]
+                    st = hec_store(st, jnp.asarray(v, jnp.int32), emb[v])
+                self.states[k] = st
+            self.sync_host()
+            return len(vids)
+        owner, _ = self.ps.route(vids) if len(vids) else (
+            np.empty(0, np.int64), np.empty(0, np.int64))
+        per_rank = [vids[owner == r] for r in range(self.num_ranks)]
+        rounds = max((len(v) for v in per_rank), default=0)
+        for s in range(0, max(rounds, 1), chunk):
+            batch = np.full((self.num_ranks, chunk), -1, np.int64)
+            for r, pv in enumerate(per_rank):
+                seg = pv[s:s + chunk]
+                batch[r, :len(seg)] = seg
+            if not (batch >= 0).any():
+                continue
+            bj = jnp.asarray(batch, jnp.int32)
+            for k, emb in enumerate(embeddings):
+                if k not in layer_set:
+                    continue
+                emb = np.asarray(emb)
+                vals = emb[np.maximum(batch, 0)] * (batch >= 0)[..., None]
+                self.states[k] = self._vstore(
+                    self.states[k], bj, jnp.asarray(vals, jnp.float32))
+        self.sync_host()
+        return len(vids)
+
+    # -- counters / metrics ---------------------------------------------------
+    def record(self, hits: np.ndarray, lookups: np.ndarray):
+        self.hits += hits.astype(np.int64)
+        self.lookups += lookups.astype(np.int64)
+
+    def record_halo(self, stats: dict):
+        """Accumulate a shard_map serve step's per-rank halo-gather counters."""
+        assert self.stacked, "halo counters are per-shard (stacked only)"
+        self.halo_seen += int(np.sum(stats["halo_seen"]))
+        self.halo_local += int(np.sum(stats["halo_local"]))
+        self.halo_fetched += int(np.sum(stats["halo_fetched"]))
+        self.halo_requested += int(np.sum(stats["halo_requested"]))
+        self.halo_l0 += int(np.sum(stats["halo_l0"]))
+
+    def reset_counters(self):
+        """Zero hit/lookup/fast-path/halo counters (cache contents
+        untouched) — call between measurement windows."""
+        self.hits[:] = 0
+        self.lookups[:] = 0
+        self.fast_path_hits = 0
+        self.halo_seen = self.halo_local = 0
+        self.halo_fetched = self.halo_requested = self.halo_l0 = 0
+
+    def occupancy(self) -> List[float]:
+        return [float(hec_occupancy(st)) for st in self.states]
+
+    def metrics(self) -> dict:
+        out = {"model_version": self.model_version,
+               "fast_path_hits": self.fast_path_hits}
+        if self.stacked:
+            out.update({
+                "num_shards": self.num_ranks,
+                "halo_seen": self.halo_seen,
+                "halo_local_hits": self.halo_local,
+                "halo_fetched": self.halo_fetched,
+                "halo_requested": self.halo_requested,
+                "halo_l0_mirror": self.halo_l0,
+                "cached_halo_frac": (
+                    self.halo_local / self.halo_seen if self.halo_seen
+                    else 0.0)})
+        for k in range(self.num_layers):
+            layer = k + 1
+            out[f"hits_l{layer}"] = int(self.hits[k])
+            out[f"lookups_l{layer}"] = int(self.lookups[k])
+            out[f"hit_rate_l{layer}"] = (
+                float(self.hits[k]) / max(int(self.lookups[k]), 1))
+            out[f"occupancy_l{layer}"] = float(
+                hec_occupancy(self.states[k]))
+        return out
+
+    # -- invalidation ---------------------------------------------------------
+    def on_model_update(self) -> int:
+        """Model-version bump: every cached embedding (on every shard, if
+        stacked) is stale — drop all."""
+        self.model_version += 1
+        self._reset_states()
+        return self.model_version

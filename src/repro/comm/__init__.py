@@ -1,0 +1,14 @@
+"""Unified halo-exchange subsystem (PR 4).
+
+``repro.comm.plan`` precomputes static exchange plans from a
+``PartitionSet`` (per-rank send/recv slots derived once at setup);
+``repro.comm.engine`` executes them — the AEP push (one fused all_to_all,
+overlappable behind the backward pass), the sync-baseline fetch, the
+serve-side per-layer cache fetch, and the exact offline exchange.
+"""
+from repro.comm.engine import HaloExchangeEngine
+from repro.comm.plan import (ExchangePlan, build_exchange_plan,
+                             solid_lookup_tables)
+
+__all__ = ["ExchangePlan", "HaloExchangeEngine", "build_exchange_plan",
+           "solid_lookup_tables"]

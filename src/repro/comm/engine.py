@@ -1,0 +1,274 @@
+"""HaloExchangeEngine — the ONE halo-exchange path (paper §3.4).
+
+Every cross-rank embedding movement in the repo goes through this engine:
+
+  * **AEP push** (training, paper Algorithm 2 lines 14-24): select up to
+    ``nc`` solid embeddings per remote rank from the static push contract
+    (``ExchangePlan.push_mask``, one boolean gather — no per-step
+    ``searchsorted`` probes), gather the per-layer embeddings, and move
+    tags + payload in ONE fused ``all_to_all`` (tags are bitcast into the
+    payload's leading lane, so the legacy two-collective push becomes a
+    single collective).  The received push lands in the delay-``d``
+    in-flight queue (``repro.core.aep``) and is HECStore'd ``d`` steps
+    later — the paper's bounded staleness, bit-exact.
+
+    **Overlap**: the push depends only on *forward* activations, so the
+    trainer dispatches it between the forward and backward passes
+    (dispatch-then-wait).  XLA's scheduler overlaps the collective with
+    backward compute — the paper's MPI ``AlltoallAsync`` + ``comm_wait``
+    scheme — and because the pushed values are identical either way,
+    overlap mode bit-matches the inline push.
+
+  * **sync fetch** (DistDGL-like baseline): blocking request/response
+    ``all_to_all`` pair answering fresh layer-0 halo features from the
+    owners' feature tables via the plan's sorted owner tables.
+
+  * **serve-side cache fetch**: the same request/response pattern, with
+    the owner answering from its layer-k HEC (sharded serving's per-layer
+    halo gather).
+
+  * **exact offline exchange** (host): one exchange per layer moving
+    exactly ``db_halo(i, j)`` rows per pair, via the plan's precomputed
+    gather/scatter index vectors.
+
+Device methods run *inside* shard_map on per-rank slices; host methods run
+outside.  The in-flight queue ADT and the analytic communication byte
+models live in ``repro.core.aep`` (the engine consumes the queue;
+benchmarks consume the byte models); exact per-exchange volumes come from
+``ExchangePlan.exchange_bytes``.
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cache import hec as hec_lib
+from repro.comm.plan import ExchangePlan, build_exchange_plan
+from repro.core import aep
+
+
+class HaloExchangeEngine:
+    """Exchange-plan-driven halo communication for train / serve / offline.
+
+    Construct with :meth:`from_partition` to carry an :class:`ExchangePlan`
+    (host-side helpers + ``device_tables()``), or directly with just the
+    shape parameters when the plan tables arrive through the sharded data
+    dict (the trainer's step functions only close over shapes)."""
+
+    def __init__(self, num_ranks: int, num_layers: int = 1,
+                 push_limit: int = 1, delay: int = 1, axis: str = "data",
+                 plan: Optional[ExchangePlan] = None):
+        self.num_ranks = num_ranks
+        self.num_layers = num_layers
+        self.push_limit = push_limit     # nc: slots per rank pair
+        self.delay = delay               # d: steps between push and consume
+        self.axis = axis
+        self.plan = plan
+
+    @classmethod
+    def from_partition(cls, ps, num_layers: int = 1, push_limit: int = 1,
+                       delay: int = 1, axis: str = "data"):
+        return cls(ps.num_parts, num_layers, push_limit, delay, axis,
+                   plan=build_exchange_plan(ps))
+
+    # -- plan plumbing --------------------------------------------------------
+    def device_tables(self) -> dict:
+        assert self.plan is not None, "engine built without a partition plan"
+        return self.plan.device_tables()
+
+    def inflight_init(self, dim_max: int) -> dict:
+        """Stacked ``[R, d, R, L, nc(, dmax)]`` in-flight push queue."""
+        return jax.vmap(lambda _: aep.queue_init(
+            self.delay, self.num_ranks, self.num_layers, self.push_limit,
+            dim_max))(jnp.arange(self.num_ranks))
+
+    # -- AEP push (device, inside shard_map) -----------------------------------
+    def select_push(self, data: dict, mb: dict, captured: dict,
+                    vid_o_nodes, num_solid, seed, dims, dmax: int, me):
+        """Per-remote-rank reservoir selection of up to ``nc`` solid
+        embeddings this rank owes (paper lines 14-20).  Membership in the
+        push contract is ONE gather into the precomputed ``push_mask``."""
+        R = self.num_ranks
+        L = self.num_layers
+        nc = self.push_limit
+        nodes0 = mb["layer_nodes"][0]
+        mask0 = mb["node_mask"][0]
+        vid0 = vid_o_nodes[0]
+        is_solid = (nodes0 < num_solid) & (nodes0 >= 0) & mask0
+        N0 = nodes0.shape[0]
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(7), seed), me)
+        u = jax.random.uniform(key, (R, N0), minval=1e-6, maxval=1.0)
+
+        pm = data["push_mask"]                       # [R_dst, P] bool
+        P = pm.shape[1]
+        member = pm[:, jnp.clip(nodes0, 0, P - 1)] & is_solid[None, :]
+        score = jnp.where(member, u, -1.0)           # [R, N0]
+        topv, topi = jax.lax.top_k(score, nc)        # [R, nc]
+        ok0 = topv > 0
+        base_tags = jnp.where(ok0, vid0[topi], -1)
+        pos = jnp.where(ok0, topi, 0)
+        base_ok = base_tags >= 0
+
+        tags = jnp.zeros((R, L, nc), jnp.int32)
+        embs = jnp.zeros((R, L, nc, dmax), jnp.float32)
+        for l in range(L):
+            h_l, valid_l = captured[l]
+            n_l = h_l.shape[0]
+            p_cl = jnp.clip(pos, 0, n_l - 1)
+            ok = base_ok & (pos < n_l) & valid_l[p_cl]
+            e = jnp.where(ok[..., None], h_l[p_cl].astype(jnp.float32), 0.0)
+            embs = embs.at[:, l, :, :dims[l]].set(e)
+            tags = tags.at[:, l].set(jnp.where(ok, base_tags, -1))
+        return tags, embs
+
+    def push(self, tags, embs) -> Tuple[jnp.ndarray, jnp.ndarray]:
+        """ONE fused all_to_all: int32 tags ride bitcast in a flat prefix
+        of the payload (pure data movement — bits survive the collective).
+        The pack is two contiguous block copies per rank row, not an
+        interleaved per-slot lane, so fusing costs no strided traffic."""
+        R, L, nc = tags.shape
+        dmax = embs.shape[-1]
+        tag_block = jax.lax.bitcast_convert_type(
+            tags, jnp.float32).reshape(R, L * nc)
+        buf = jnp.concatenate(
+            [tag_block, embs.reshape(R, L * nc * dmax)], axis=-1)
+        rec = jax.lax.all_to_all(buf, self.axis, 0, 0)
+        rec_tags = jax.lax.bitcast_convert_type(
+            rec[:, :L * nc], jnp.int32).reshape(R, L, nc)
+        return rec_tags, rec[:, L * nc:].reshape(R, L, nc, dmax)
+
+    def aep_push(self, data, mb, captured, vid_o_nodes, num_solid, inflight,
+                 seed, dims, dmax, me):
+        """Select + fused-push + enqueue; returns ``(inflight, stats)``.
+
+        ``stats['push_rows']`` / ``stats['push_bytes']`` measure the
+        payload this step dispatched behind the backward pass (the
+        overlap metrics surfaced by the trainer/examples)."""
+        tags, embs = self.select_push(data, mb, captured, vid_o_nodes,
+                                      num_solid, seed, dims, dmax, me)
+        rec_tags, rec_embs = self.push(tags, embs)
+        rows = (tags >= 0).sum()
+        nbytes = jnp.zeros((), jnp.float32)
+        for l in range(self.num_layers):
+            nbytes += (tags[:, l] >= 0).sum().astype(jnp.float32) \
+                * (4.0 + 4.0 * dims[l])
+        stats = {"push_rows": rows, "push_bytes": nbytes}
+        return aep.queue_pop_push(inflight, rec_tags, rec_embs), stats
+
+    def consume_push(self, hec: List, inflight: dict, dims,
+                     life_span: int) -> List:
+        """Tick every layer's HEC, then store the delay-expired push slot
+        (paper lines 8-9)."""
+        hec = [hec_lib.hec_tick(h, life_span) for h in hec]
+        for l in range(self.num_layers):
+            tl = inflight["tags"][0, :, l].reshape(-1)
+            el = inflight["embs"][0, :, l, :, :dims[l]].reshape(-1, dims[l])
+            hec[l] = hec_lib.hec_store(hec[l], tl, el)
+        return hec
+
+    # -- sync baseline fetch (device, inside shard_map) -------------------------
+    def sync_fetch(self, data, vid0, is_halo0, h0):
+        """DistDGL-like blocking fetch of fresh layer-0 halo features."""
+        R = self.num_ranks
+        nc = self.push_limit
+        N0 = vid0.shape[0]
+        # request the first nc halos (by position) from every rank; the
+        # owner answers.  (DistDGL prefetches remote features for the whole
+        # sampled neighborhood right after minibatch creation.)
+        score = jnp.where(is_halo0,
+                          (jnp.arange(N0, 0, -1, dtype=jnp.float32)), -1.0)
+        topv, topi = jax.lax.top_k(score, nc)
+        ok = topv > 0
+        req_row = jnp.where(ok, vid0[topi], -1)
+        req = jnp.broadcast_to(req_row, (R, nc))
+        pos_row = jnp.where(ok, topi, 0)
+        got_req = jax.lax.all_to_all(req, self.axis, 0, 0)  # [R_from, nc]
+        sorted_vids = data["solid_sorted_vids"]
+        S = sorted_vids.shape[0]
+        loc = jnp.clip(jnp.searchsorted(sorted_vids, got_req), 0, S - 1)
+        own = (sorted_vids[loc] == got_req) & (got_req >= 0)
+        feats = data["features"][data["solid_sorted_idx"][loc]] \
+            * own[..., None]
+        resp = jax.lax.all_to_all(
+            jnp.concatenate([feats, own[..., None].astype(jnp.float32)], -1),
+            self.axis, 0, 0)                                # [R, nc, F+1]
+        got_feats, got_ok = resp[..., :-1], resp[..., -1] > 0.5
+        # each requested halo answered by exactly its owner -> sum over ranks
+        add = (got_feats * got_ok[..., None]).sum(0)        # [nc, F]
+        any_ok = got_ok.any(0)                              # [nc]
+        h0 = h0.at[pos_row].add(jnp.where(any_ok[:, None], add, 0.0))
+        got = jnp.zeros(N0, bool).at[pos_row].max(any_ok)
+        return h0, got & is_halo0
+
+    # -- serve-side cache fetch (device, inside shard_map) ----------------------
+    def cache_fetch(self, state, vids_o, owner, need, h,
+                    slots: Optional[int] = None):
+        """One all_to_all request/response pair answering the ``need`` rows
+        from the owners' layer-k caches.  Returns the substituted ``h``,
+        the rows answered, and how many rows actually traveled."""
+        R = self.num_ranks
+        N = vids_o.shape[0]
+        d = h.shape[1]
+        slots = min(slots or self.push_limit, N)
+        prio = jnp.arange(N, 0, -1).astype(jnp.float32)
+        req_rows, pos_rows = [], []
+        for j in range(R):
+            score = jnp.where(need & (owner == j), prio, -1.0)
+            topv, topi = jax.lax.top_k(score, slots)
+            ok = topv > 0
+            req_rows.append(jnp.where(ok, vids_o[topi], -1))
+            pos_rows.append(jnp.where(ok, topi, N))  # N -> scatter-drop
+        req = jnp.stack(req_rows).astype(jnp.int32)        # [R, slots]
+        pos = jnp.stack(pos_rows)
+        got_req = jax.lax.all_to_all(req, self.axis, 0, 0)  # [R_src, slots]
+        own, vals = hec_lib.hec_lookup(state, got_req.reshape(-1))
+        own = own.reshape(R, slots)
+        vals = vals.reshape(R, slots, d)
+        resp = jax.lax.all_to_all(
+            jnp.concatenate(
+                [vals.astype(jnp.float32),
+                 own[..., None].astype(jnp.float32)], -1),
+            self.axis, 0, 0)                                # [R, slots, d+1]
+        r_vals, r_ok = resp[..., :-1], resp[..., -1] > 0.5
+        fetched = jnp.zeros((N, d), h.dtype)
+        got = jnp.zeros(N, bool)
+        # request rows to distinct owners occupy disjoint positions, so
+        # per-owner scatters never collide; pad slots land on N (drop)
+        for j in range(R):
+            fetched = fetched.at[pos[j]].set(
+                r_vals[j].astype(h.dtype) * r_ok[j][:, None], mode="drop")
+            got = got.at[pos[j]].max(r_ok[j], mode="drop")
+        h = jnp.where(got[:, None], fetched, h)
+        return h, got, (req >= 0).sum()
+
+    # -- exact offline exchange (host) -----------------------------------------
+    def exchange_halos_host(self, h_solid: List[np.ndarray]) \
+            -> Tuple[List[np.ndarray], int]:
+        """One exact halo exchange: every rank receives the current-layer
+        embeddings of its halo replicas from their owners.
+
+        Pair (i, j) moves exactly ``db_halo(i, j)`` rows through the
+        plan's precomputed gather/scatter indices.  Returns per-rank halo
+        rows (aligned with ``part.halo_vids``) and the total bytes moved
+        (payload + vid tags), the number the benchmark comm model uses."""
+        assert self.plan is not None and self.plan.send_local is not None, \
+            "needs a plan built with host_indices=True"
+        plan = self.plan
+        R = self.num_ranks
+        dim = h_solid[0].shape[1] if len(h_solid) else 0
+        rows_out: List[np.ndarray] = []
+        nbytes = 0
+        for j in range(R):
+            rows = np.zeros((int(plan.num_halo[j]), dim), np.float32)
+            for i in range(R):
+                if i == j or not len(plan.send_local[i][j]):
+                    continue
+                payload = h_solid[i][plan.send_local[i][j]]
+                rows[plan.recv_pos[i][j]] = payload
+                nbytes += payload.nbytes + len(plan.send_local[i][j]) * 4
+            rows_out.append(rows)
+        return rows_out, nbytes

@@ -1,0 +1,145 @@
+"""Static halo-exchange plans: every per-step index computation the
+trainer and serving schedulers used to redo each iteration, precomputed
+ONCE from the ``PartitionSet`` at setup.
+
+The partition contract is static for the lifetime of a partitioning:
+``db_halo(i, j)`` (what rank i owes rank j), each rank's sorted solid
+owner tables, and the per-pair scatter/gather indices of an exact halo
+exchange never change between steps.  ``build_exchange_plan`` derives them
+all once; ``ExchangePlan.device_tables()`` stacks the device-side pieces
+``[R, ...]`` so a shard_map program (sharded on the mesh's ``data`` axis)
+reads its slice with plain gathers:
+
+  * ``db_halo [R, R, D]``       — sorted, sentinel-padded push contract
+  * ``push_mask [R, R, P]``     — ``push_mask[i, j, p]``: solid VID_p ``p``
+    of rank i is a halo on rank j.  Replaces the per-step ``searchsorted``
+    membership probes of the legacy AEP push with ONE boolean gather.
+  * ``solid_sorted_vids/idx [R, S]`` — per-rank sorted owner tables: any
+    rank answers "which feature/embedding row is VID_o v?" with one
+    ``searchsorted`` + gather (trainer sync fetch, serve halo gather).
+
+Host-side, ``send_local[i][j]`` / ``recv_pos[i][j]`` are the gather/scatter
+index vectors of one exact exchange (offline inference): rank j receives
+``h_solid[i][send_local[i][j]]`` into its halo rows at ``recv_pos[i][j]``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.graph.partition import PartitionSet
+
+_SENTINEL = np.int32(2 ** 30)    # sorts after every real VID_o
+
+
+def _pad_stack(arrays, pad_value=0, dtype=None) -> np.ndarray:
+    """Stack ragged per-rank arrays into ``[R, max_len, ...]`` with padding."""
+    n = max(len(a) for a in arrays)
+    rest = arrays[0].shape[1:]
+    out = np.full((len(arrays), n) + rest, pad_value,
+                  dtype or arrays[0].dtype)
+    for i, a in enumerate(arrays):
+        out[i, :len(a)] = a
+    return out
+
+
+def solid_lookup_tables(ps: PartitionSet):
+    """Per-rank sorted owner tables: ``(vids [R, Smax], idx [R, Smax])``.
+
+    ``vids[r]`` is rank r's solid VID_o sorted ascending (sentinel-padded);
+    ``idx[r]`` the matching solid VID_p via ``PartitionSet.route`` — so any
+    rank can answer "which feature/embedding row is VID_o v?" with one
+    searchsorted + gather.  Shared by the trainer's sync-mode fetch and the
+    serve-side halo gather."""
+    svids, sidx = [], []
+    for p in ps.parts:
+        vs = np.sort(p.solid_vids)
+        _, li = ps.route(vs)
+        svids.append(vs.astype(np.int32))
+        sidx.append(li.astype(np.int32))
+    return (_pad_stack(svids, _SENTINEL), _pad_stack(sidx, 0))
+
+
+@dataclasses.dataclass
+class ExchangePlan:
+    """Precomputed static exchange tables for one ``PartitionSet``."""
+    num_ranks: int
+    num_vertices: int
+    db_halo: np.ndarray            # [R, R, D] int32, sorted + sentinel pad
+    push_mask: np.ndarray          # [R, R, P] bool (P = padded VID_p width)
+    solid_sorted_vids: np.ndarray  # [R, S] int32, sentinel pad
+    solid_sorted_idx: np.ndarray   # [R, S] int32
+    pair_rows: np.ndarray          # [R, R] int64: |db_halo(i, j)|
+    num_halo: np.ndarray           # [R] int64: halo replicas per rank
+    # offline-exchange index vectors (None when host_indices=False):
+    send_local: Optional[List[List[np.ndarray]]]  # [i][j]: VID_p rows i -> j
+    recv_pos: Optional[List[List[np.ndarray]]]    # [i][j]: halo slots on j
+
+    @property
+    def halo_rows_total(self) -> int:
+        """Rows one exact full exchange moves (sum over off-diagonal pairs)."""
+        return int(self.pair_rows.sum() - np.trace(self.pair_rows))
+
+    def exchange_bytes(self, dim: int, itemsize: int = 4) -> int:
+        """Exact payload (+ vid tags) of one full halo exchange at ``dim``."""
+        return self.halo_rows_total * (dim * itemsize + 4)
+
+    def device_tables(self) -> dict:
+        """The ``[R, ...]``-stacked tables a shard_map step consumes
+        (merged into the trainer's / server's sharded data dict).
+        ``db_halo`` itself stays host-side: the push membership it encodes
+        travels as the (denser to probe) ``push_mask``."""
+        return {
+            "push_mask": jnp.asarray(self.push_mask),
+            "solid_sorted_vids": jnp.asarray(self.solid_sorted_vids),
+            "solid_sorted_idx": jnp.asarray(self.solid_sorted_idx),
+        }
+
+
+def build_exchange_plan(ps: PartitionSet,
+                        host_indices: bool = True) -> ExchangePlan:
+    """Derive every static exchange table from the partition contract.
+
+    ``host_indices=False`` skips the offline-exchange gather/scatter index
+    vectors (an extra route + searchsorted per rank pair) — consumers that
+    only need the device tables (the trainer) save that setup cost."""
+    R = ps.num_parts
+    dbs = [[ps.db_halo(i, j) for j in range(R)] for i in range(R)]
+    D = max(1, max(len(d) for row in dbs for d in row))
+    db_halo = np.full((R, R, D), _SENTINEL, np.int32)
+    pair_rows = np.zeros((R, R), np.int64)
+    for i in range(R):
+        for j in range(R):
+            db_halo[i, j, :len(dbs[i][j])] = dbs[i][j]
+            pair_rows[i, j] = len(dbs[i][j])
+
+    P = max(p.num_solid + p.num_halo for p in ps.parts)
+    push_mask = np.zeros((R, R, P), bool)
+    send_local = [[np.empty(0, np.int64)] * R
+                  for _ in range(R)] if host_indices else None
+    recv_pos = [[np.empty(0, np.int64)] * R
+                for _ in range(R)] if host_indices else None
+    for i in range(R):
+        pi = ps.parts[i]
+        for j in range(R):
+            vids = dbs[i][j]
+            if i != j and len(vids):
+                # db vids are owned by i: membership over i's solid VID_p
+                push_mask[i, j, :pi.num_solid] = np.isin(
+                    pi.solid_vids, vids, assume_unique=True)
+                if host_indices:
+                    _, local = ps.route(vids)
+                    send_local[i][j] = local.astype(np.int64)
+                    recv_pos[i][j] = np.searchsorted(
+                        ps.parts[j].halo_vids, vids).astype(np.int64)
+
+    svids, sidx = solid_lookup_tables(ps)
+    return ExchangePlan(
+        num_ranks=R, num_vertices=len(ps.owner), db_halo=db_halo,
+        push_mask=push_mask, solid_sorted_vids=svids, solid_sorted_idx=sidx,
+        pair_rows=pair_rows,
+        num_halo=np.array([p.num_halo for p in ps.parts], np.int64),
+        send_local=send_local, recv_pos=recv_pos)

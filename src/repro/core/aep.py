@@ -1,11 +1,11 @@
 """Asynchronous Embedding Push — analytic communication model + helpers.
 
-The AEP device algorithm itself (select solids per remote rank from
-db_halo, degree/reservoir sampling to nc, gather per-layer embeddings,
-all_to_all, delay-d in-flight queue) lives in
-``repro.train.gnn_trainer.DistTrainer._aep_push`` because it closes over
-the training step's captured activations.  This module holds the pieces
-that are independent of the step:
+The AEP device algorithm itself (select solids per remote rank from the
+precomputed push contract, reservoir sampling to nc, gather per-layer
+embeddings, ONE fused all_to_all, delay-d in-flight queue) lives in
+``repro.comm.engine.HaloExchangeEngine`` — the engine consumes this
+module's queue ADT and byte models.  This module holds the pieces that
+are independent of the step:
 
 * the delay-queue ADT used by the trainer,
 * analytic per-step communication volumes for AEP vs the DistDGL-like

@@ -1,138 +1,14 @@
-"""Historical Embedding Cache (paper §3.2) — functional, TPU-native.
+"""Compatibility shim — the Historical Embedding Cache moved to
+``repro.cache.hec`` (PR 4: one cache implementation for training, serving,
+and sharded serving).
 
-The paper's HEC is an OpenMP hash table with global oldest-cache-line-first
-(OCF) replacement.  The TPU adaptation is a *set-associative* cache over
-dense tensors (tags / age / values), searched with a vectorized
-hash -> set -> way-compare, replaced OCF *within the set*:
-
-    state.tags   [nsets, ways] int32   VID_o tag, -1 = empty
-    state.age    [nsets, ways] int32   iterations since fill
-    state.values [nsets, ways, dim]    the historical embedding
-
-Semantics preserved from the paper:
-  * cs = nsets*ways fixed entries; tags are original vertex IDs (VID_o)
-  * life-span ls: lines with age > ls are purged (hec_tick, once/iteration)
-  * replacement: matching tag > empty way > oldest way (OCF)
-  * HECSearch / HECLoad / HECStore are the three management ops
-  * loads are stop_gradient'ed: historical embeddings are constants
-    (bounded staleness, no gradient flow — same as GNNAutoScale/Sancus)
-
-All ops are jnp-vectorized and run inside jit / shard_map (one HEC per rank
-per GNN layer, exactly as in the paper).
+Every symbol re-exported here is the *same object* as in
+``repro.cache.hec``; cache state transitions are defined only there.
+Import from ``repro.cache`` in new code.
 """
-from __future__ import annotations
+from repro.cache.hec import (HECState, _set_index, hec_init, hec_load,  # noqa: F401
+                             hec_lookup, hec_occupancy, hec_search,
+                             hec_store, hec_tick)
 
-import dataclasses
-
-import jax
-import jax.numpy as jnp
-
-_MIX = jnp.uint32(0x9E3779B1)     # Fibonacci hashing multiplier
-
-
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass
-class HECState:
-    tags: jnp.ndarray      # [nsets, ways] int32
-    age: jnp.ndarray       # [nsets, ways] int32
-    values: jnp.ndarray    # [nsets, ways, dim]
-
-    @property
-    def nsets(self):
-        return self.tags.shape[0]
-
-    @property
-    def ways(self):
-        return self.tags.shape[1]
-
-
-def hec_init(cache_size: int, ways: int, dim: int,
-             dtype=jnp.float32) -> HECState:
-    assert cache_size % ways == 0
-    nsets = cache_size // ways
-    return HECState(
-        tags=jnp.full((nsets, ways), -1, jnp.int32),
-        age=jnp.zeros((nsets, ways), jnp.int32),
-        values=jnp.zeros((nsets, ways, dim), dtype))
-
-
-def _set_index(vids: jnp.ndarray, nsets: int) -> jnp.ndarray:
-    h = (vids.astype(jnp.uint32) * _MIX) >> jnp.uint32(8)
-    return (h % jnp.uint32(nsets)).astype(jnp.int32)
-
-
-def hec_tick(state: HECState, life_span: int) -> HECState:
-    """Advance one iteration: age lines, purge those older than ls."""
-    age = state.age + 1
-    expired = age > life_span
-    return HECState(
-        tags=jnp.where(expired, -1, state.tags),
-        age=jnp.where(expired, 0, age),
-        values=state.values)
-
-
-def hec_store(state: HECState, vids: jnp.ndarray, embs: jnp.ndarray,
-              valid: jnp.ndarray | None = None) -> HECState:
-    """Scatter embeddings into the cache.
-
-    vids [n] int32 (VID_o); embs [n, dim]; valid [n] bool.  Way choice per
-    entry: matching tag, else an empty way, else the oldest (OCF).  When two
-    batch entries collide on the same (set, way) the later scatter wins —
-    acceptable (both are fresh embeddings of equal standing).
-    """
-    if valid is None:
-        valid = vids >= 0
-    nsets, ways = state.tags.shape
-    n = vids.shape[0]
-    s = _set_index(vids, nsets)                       # [n]
-    set_tags = state.tags[s]                          # [n, ways]
-    set_age = state.age[s]
-    match = set_tags == vids[:, None]
-    empty = set_tags < 0
-    oldest = jnp.argmax(set_age, axis=1)
-    first_empty = jnp.argmax(empty, axis=1)
-    way = jnp.where(match.any(1), jnp.argmax(match, axis=1),
-                    jnp.where(empty.any(1), first_empty, oldest))
-    # de-conflict ways for same-set entries WITHIN this batch: the r-th
-    # batch entry landing in a set takes (way + r) % ways, so up to `ways`
-    # same-set entries occupy distinct lines (beyond that: last-write-wins)
-    order = jnp.argsort(s)
-    s_sorted = s[order]
-    first_pos = jnp.searchsorted(s_sorted, s_sorted, side="left")
-    rank_sorted = jnp.arange(n) - first_pos
-    rank = jnp.zeros(n, rank_sorted.dtype).at[order].set(rank_sorted)
-    way = (way + rank) % ways
-    # invalid entries scatter out-of-bounds and are dropped
-    s_safe = jnp.where(valid, s, nsets)
-    tags = state.tags.at[s_safe, way].set(vids.astype(jnp.int32), mode="drop")
-    age = state.age.at[s_safe, way].set(0, mode="drop")
-    vals = state.values.at[s_safe, way].set(
-        embs.astype(state.values.dtype), mode="drop")
-    return HECState(tags=tags, age=age, values=vals)
-
-
-def hec_search(state: HECState, vids: jnp.ndarray):
-    """vids [m] -> (hit [m] bool, set_idx [m], way_idx [m])."""
-    nsets, _ = state.tags.shape
-    s = _set_index(vids, nsets)
-    match = state.tags[s] == vids[:, None]
-    valid = vids >= 0
-    hit = match.any(axis=1) & valid
-    way = jnp.argmax(match, axis=1)
-    return hit, s, way
-
-
-def hec_load(state: HECState, set_idx: jnp.ndarray, way_idx: jnp.ndarray):
-    """Gather embeddings at (set, way); stop_gradient (historical)."""
-    return jax.lax.stop_gradient(state.values[set_idx, way_idx])
-
-
-def hec_lookup(state: HECState, vids: jnp.ndarray):
-    """Convenience: (hit [m], emb [m, dim]) with misses zeroed."""
-    hit, s, w = hec_search(state, vids)
-    emb = hec_load(state, s, w)
-    return hit, jnp.where(hit[:, None], emb, 0.0)
-
-
-def hec_occupancy(state: HECState) -> jnp.ndarray:
-    return (state.tags >= 0).mean()
+__all__ = ["HECState", "hec_init", "hec_load", "hec_lookup",
+           "hec_occupancy", "hec_search", "hec_store", "hec_tick"]

@@ -8,7 +8,9 @@ by the grid; the values gather (HECLoad) runs on the (set, way) pairs this
 kernel returns.
 
 Outputs per probe: hit flag and way index (set index is recomputed by the
-caller from the same hash — kept in sync with repro.core.hec._set_index).
+caller from the same hash — kept in sync with repro.cache.hec._set_index).
+This kernel stays the lookup primitive of the unified cache subsystem
+(``repro.cache``); the functional state transitions live there.
 """
 from __future__ import annotations
 
@@ -24,7 +26,7 @@ _MIX = np.uint32(0x9E3779B1)
 
 
 def set_index(vids: jnp.ndarray, nsets: int) -> jnp.ndarray:
-    """Must match repro.core.hec._set_index."""
+    """Must match repro.cache.hec._set_index."""
     h = (vids.astype(jnp.uint32) * _MIX) >> np.uint32(8)
     return (h % jnp.uint32(nsets)).astype(jnp.int32)
 

@@ -94,11 +94,19 @@ def main():
           f"memory={terms['memory_s']*1e3:.3f}ms "
           f"collective={terms['collective_s']*1e3:.3f}ms -> {dom} bound")
     if args.mode == "aep":
-        a2a = r["collectives"].get("all-to-all", {"count": 0})
-        assert a2a["count"] >= 2, "AEP must lower to all-to-all pushes"
-        print(f"AEP all_to_all present: {a2a['count']:.0f} ops "
-              f"({a2a['bytes']:.3e} B/device/step) — the paper's async "
-              f"embedding push, overlappable behind compute at d=1")
+        a2a = r["collectives"].get("all-to-all", {"count": 0, "bytes": 0.0})
+        assert a2a["count"] >= 1, \
+            "AEP must lower to the engine's fused all-to-all push"
+        push_s = a2a["bytes"] / ICI_BW
+        work_s = max(terms["compute_s"], terms["memory_s"])  # on-device step
+        hidden = min(push_s, work_s) / max(push_s, 1e-30)
+        print(f"AEP fused all_to_all: {a2a['count']:.0f} op(s) "
+              f"({a2a['bytes']:.3e} B/device/step) — the engine's push, "
+              f"dispatched between forward and backward (overlap mode)")
+        print(f"overlap: {a2a['bytes']:.3e} B/step overlapped behind the "
+              f"backward pass; modeled push latency hidden "
+              f"{hidden*100:.0f}% (push {push_s*1e6:.3f}us vs on-device "
+              f"step work {work_s*1e6:.3f}us)")
 
 
 if __name__ == "__main__":

@@ -29,6 +29,7 @@ from typing import List, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.comm.engine import HaloExchangeEngine
 from repro.graph.partition import PartitionSet
 from repro.serve.gnn.offline import (full_neighbor_matrix,
                                      layer_chunk_outputs, serve_layer_dims)
@@ -45,30 +46,12 @@ def global_neighbor_width(ps: PartitionSet) -> int:
 
 def exchange_halos(ps: PartitionSet,
                    h_solid: List[np.ndarray]) -> Tuple[List[np.ndarray], int]:
-    """The per-layer halo exchange: every rank receives the current-layer
-    embeddings of its halo replicas from their owners.
-
-    Pair (i, j) moves exactly ``db_halo(i, j)`` rows — what rank i owes
-    rank j under the partition contract.  Returns per-rank halo rows
-    (aligned with ``part.halo_vids``) and the total bytes moved (payload +
-    vid tags), the number the benchmark's comm model consumes."""
-    dim = h_solid[0].shape[1] if len(h_solid) else 0
-    rows_out: List[np.ndarray] = []
-    nbytes = 0
-    for j, pj in enumerate(ps.parts):
-        rows = np.zeros((pj.num_halo, dim), np.float32)
-        for i in range(ps.num_parts):
-            if i == j:
-                continue
-            vids = ps.db_halo(i, j)          # VID_o owned by i, halos on j
-            if not len(vids):
-                continue
-            _, local = ps.route(vids)
-            payload = h_solid[i][local]      # rank i's send buffer to j
-            rows[np.searchsorted(pj.halo_vids, vids)] = payload
-            nbytes += payload.nbytes + vids.size * 4
-        rows_out.append(rows)
-    return rows_out, nbytes
+    """Compatibility wrapper over
+    ``HaloExchangeEngine.exchange_halos_host`` — one exact per-layer halo
+    exchange (pair (i, j) moves exactly ``db_halo(i, j)`` rows).  Builds a
+    throwaway plan; loops over layers should build the engine once (as
+    ``layerwise_embeddings_dist`` does) and call it per layer."""
+    return HaloExchangeEngine.from_partition(ps).exchange_halos_host(h_solid)
 
 
 def layerwise_embeddings_dist(cfg, params, ps: PartitionSet,
@@ -76,11 +59,12 @@ def layerwise_embeddings_dist(cfg, params, ps: PartitionSet,
                               with_stats: bool = False):
     """Exact full-graph embeddings ``[h^1, ..., h^L]`` in GLOBAL vertex
     order (each ``[V, d_k]``), computed shard-by-shard with exactly one
-    halo exchange per layer."""
+    halo exchange per layer (``HaloExchangeEngine``, plan built once)."""
     R = ps.num_parts
     V = len(ps.owner)
     L = cfg.num_layers
     dims = serve_layer_dims(cfg)
+    engine = HaloExchangeEngine.from_partition(ps, num_layers=L)
     w = global_neighbor_width(ps)
     nbr_full = [full_neighbor_matrix(p, width=w) for p in ps.parts]
     h_solid = [np.asarray(p.features, np.float32) for p in ps.parts]
@@ -89,7 +73,7 @@ def layerwise_embeddings_dist(cfg, params, ps: PartitionSet,
     for l in range(L):
         p_l = params["layers"][l]
         last = l == L - 1
-        halo_rows, nb = exchange_halos(ps, h_solid)
+        halo_rows, nb = engine.exchange_halos_host(h_solid)
         bytes_exchanged += nb
         nxt_solid: List[np.ndarray] = []
         for r, part in enumerate(ps.parts):

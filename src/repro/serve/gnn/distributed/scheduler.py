@@ -19,8 +19,9 @@ microbatches.  Per round:
      never travel).  At every hidden layer the local shard cache is
      consulted first (``hec_lookup``), then the *remaining* cross-cut halo
      rows are gathered from their owners' caches with ONE all_to_all
-     request/response pair (the trainer's sync-mode pattern: fixed
-     ``halo_slots`` per rank pair).  Fetched halo embeddings are stored
+     request/response pair — ``HaloExchangeEngine.cache_fetch``, the same
+     engine the trainer pushes through, with fixed ``halo_slots`` per rank
+     pair.  Fetched halo embeddings are stored
      back into the local shard cache, so repeated cross-cut neighborhoods
      stop traveling — the cached-halo fraction is a first-class metric,
   4. **residency sync** (host): device tags mirrored per shard.
@@ -45,7 +46,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
-from repro.core import hec as hec_lib
+from repro.cache import hec as hec_lib
+from repro.comm.engine import HaloExchangeEngine
+from repro.comm.plan import _pad_stack
 from repro.graph.partition import PartitionSet
 from repro.models.gnn import gat as gat_lib
 from repro.models.gnn import graphsage as sage_lib
@@ -56,7 +59,6 @@ from repro.serve.gnn.distributed.sharded_cache import ShardedServingCache
 from repro.serve.gnn.embedding_cache import ServeCacheConfig
 from repro.serve.gnn.offline import serve_layer_dims
 from repro.serve.gnn.scheduler import GNNRequest, ServeFrontend
-from repro.train.gnn_trainer import _pad_stack
 from repro.utils import compat
 
 
@@ -120,6 +122,8 @@ class DistGNNServeScheduler(ServeFrontend):
         self.cache = ShardedServingCache(serve_layer_dims(cfg), ps,
                                          self.scfg.cache)
         self.router = QueryRouter(ps)
+        self.engine = HaloExchangeEngine(self.num_ranks, cfg.num_layers,
+                                         push_limit=self.scfg.halo_slots)
         self._init_frontend()
         self._step = self._build_step()
         self._lookup = jax.jit(jax.vmap(
@@ -128,53 +132,9 @@ class DistGNNServeScheduler(ServeFrontend):
     # -- compiled shard_map serve step --------------------------------------
     def _build_step(self):
         cfg = self.cfg
-        scfg = self.scfg
         L = cfg.num_layers
-        R = self.num_ranks
-        nc = scfg.halo_slots
+        engine = self.engine
         fwd = sage_lib.forward if cfg.model == "graphsage" else gat_lib.forward
-
-        def fetch(states, vids_o, owner, need, h, k):
-            """One all_to_all request/response pair: ``h^k`` of the `need`
-            rows from their owners' layer-k caches (k >= 1; layer-0 halo
-            features come from the static per-shard mirror and never
-            travel).  Returns the substituted ``h``, the rows answered,
-            and how many rows actually traveled."""
-            N = vids_o.shape[0]
-            d = h.shape[1]
-            slots = min(nc, N)     # a layer never needs more than its rows
-            prio = jnp.arange(N, 0, -1).astype(jnp.float32)
-            req_rows, pos_rows = [], []
-            for j in range(R):
-                score = jnp.where(need & (owner == j), prio, -1.0)
-                topv, topi = jax.lax.top_k(score, slots)
-                ok = topv > 0
-                req_rows.append(jnp.where(ok, vids_o[topi], -1))
-                pos_rows.append(jnp.where(ok, topi, N))  # N -> scatter-drop
-            req = jnp.stack(req_rows).astype(jnp.int32)       # [R, slots]
-            pos = jnp.stack(pos_rows)
-            got_req = jax.lax.all_to_all(req, "data", 0, 0)   # [R_src, slots]
-            own, vals = hec_lib.hec_lookup(states[k - 1],
-                                           got_req.reshape(-1))
-            own = own.reshape(R, slots)
-            vals = vals.reshape(R, slots, d)
-            resp = jax.lax.all_to_all(
-                jnp.concatenate(
-                    [vals.astype(jnp.float32),
-                     own[..., None].astype(jnp.float32)], -1),
-                "data", 0, 0)                                    # [R, nc, d+1]
-            r_vals, r_ok = resp[..., :-1], resp[..., -1] > 0.5
-            fetched = jnp.zeros((N, d), h.dtype)
-            got = jnp.zeros(N, bool)
-            # request rows to distinct owners occupy disjoint positions, so
-            # per-owner scatters never collide; pad slots land on N (drop)
-            for j in range(R):
-                fetched = fetched.at[pos[j]].set(
-                    r_vals[j].astype(h.dtype) * r_ok[j][:, None],
-                    mode="drop")
-                got = got.at[pos[j]].max(r_ok[j], mode="drop")
-            h = jnp.where(got[:, None], fetched, h)
-            return h, got, (req >= 0).sum()
 
         def stepf(params, states, data, mb):
             sq = lambda t: jax.tree_util.tree_map(lambda a: a[0], t)
@@ -217,10 +177,13 @@ class DistGNNServeScheduler(ServeFrontend):
                 hit, emb = hec_lib.hec_lookup(states[k - 1], vids)
                 hit = hit & maskk
                 h = jnp.where(hit[:, None], emb, h)
-                # remaining halo rows travel: owner's layer-k cache answers
+                # remaining halo rows travel: the engine's request/response
+                # all_to_all pair, answered from the owners' layer-k caches
+                # (layer-0 halo features come from the static per-shard
+                # mirror and never travel)
                 need = is_halo & ~hit
-                h, got, nreq = fetch(states, vids, owner_nodes[k],
-                                     need, h, k)
+                h, got, nreq = engine.cache_fetch(states[k - 1], vids,
+                                                  owner_nodes[k], need, h)
                 # a halo is valid only if substituted (its local partial
                 # compute never aggregated its remote neighborhood)
                 valid = ((valid & ~is_halo) | hit | got) & maskk

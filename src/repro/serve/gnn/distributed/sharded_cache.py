@@ -1,185 +1,27 @@
-"""Sharded serving cache: one per-layer HEC per mesh rank, stacked ``[R, ...]``.
+"""Sharded serving cache — a thin policy wrapper over the unified
+``repro.cache.hec.EmbeddingCache`` (PR 4).
 
-The single-rank ``ServingCache`` holds one ``HECState`` per layer; the
-sharded version stacks ``R`` of them on a leading rank axis (exactly how
-``DistTrainer`` stacks its training HECs), so the shard_map serve step can
-shard them on the mesh's ``data`` axis.  Tags are **VID_o** — original
-vertex ids — which lets a shard cache embeddings of vertices it does *not*
-own: once a halo embedding has been fetched from its owner, it is stored
-locally and later queries touching the same cross-cut neighbor are answered
-without any all_to_all traffic (the "cached halo" fast path; its fraction
-is a first-class metric).
-
-Host state per shard mirrors the single-rank design:
-
-  * a residency mirror ``resident[k][r, v]`` (bool over global VID_o),
-    rebuilt from the authoritative device tags after every store batch —
-    drives both the sampler's ``expandable`` leaf decisions *per shard*
-    and the router's output-cache fast path,
-  * aggregated hit/miss/occupancy counters plus the halo-gather counters
-    (seen / served-locally / fetched / requested) accumulated from the
-    serve step's per-rank stats,
-  * model-version invalidation dropping every line on every shard at once.
+Constructing the unified cache with a ``PartitionSet`` selects the
+stacked policy: per-layer HEC states stacked ``[R, ...]`` on a leading
+rank axis (sharded on the mesh's ``data`` axis, exactly how
+``DistTrainer`` stacks its training HECs), **VID_o** tags so a shard can
+cache embeddings of vertices it does *not* own (fetched halos stop
+traveling — the "cached halo" fast path, a first-class metric), per-shard
+residency mirrors, owner-routed ``warm``, halo-gather counters, and
+model-version invalidation dropping every line on every shard at once.
+See ``repro/cache/hec.py``; every cache state transition lives there.
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+from typing import Optional, Sequence
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import hec as hec_lib
+from repro.cache.hec import EmbeddingCache, ServeCacheConfig
 from repro.graph.partition import PartitionSet
-from repro.serve.gnn.embedding_cache import ServeCacheConfig
 
 
-class ShardedServingCache:
-    """Per-rank stacked HEC states + per-shard residency mirrors."""
+class ShardedServingCache(EmbeddingCache):
+    """Per-rank stacked serving policy over a ``PartitionSet``."""
 
     def __init__(self, dims: Sequence[int], ps: PartitionSet,
                  cfg: Optional[ServeCacheConfig] = None):
-        self.cfg = cfg or ServeCacheConfig()
-        self.dims = list(dims)                 # dims of h^1 .. h^L
-        self.ps = ps
-        self.num_ranks = ps.num_parts
-        self.num_vertices = len(ps.owner)      # global V (tags are VID_o)
-        self.model_version = 0
-        self._vid_p_to_o = [p.vid_p_to_o() for p in ps.parts]
-        self._vstore = jax.jit(jax.vmap(hec_lib.hec_store))
-        self._reset_states()
-        self.hits = np.zeros(len(dims), np.int64)
-        self.lookups = np.zeros(len(dims), np.int64)
-        self.fast_path_hits = 0
-        self.halo_seen = 0          # halo rows at hidden layers (h^k needed)
-        self.halo_local = 0         # answered from the local shard's cache
-        self.halo_fetched = 0       # answered by the owner via all_to_all
-        self.halo_requested = 0     # rows that actually traveled
-        self.halo_l0 = 0            # layer-0 rows served by the feature mirror
-
-    def init_states(self):
-        """Fresh (empty) stacked states — also the disabled-cache baseline."""
-        R = self.num_ranks
-        return [jax.vmap(lambda _: hec_lib.hec_init(
-            self.cfg.cache_size, self.cfg.ways, d))(jnp.arange(R))
-            for d in self.dims]
-
-    def _reset_states(self):
-        self.states = self.init_states()
-        self.resident = [np.zeros((self.num_ranks, self.num_vertices), bool)
-                         for _ in self.dims]
-
-    @property
-    def num_layers(self) -> int:
-        return len(self.dims)
-
-    # -- residency mirror ---------------------------------------------------
-    def sync_host(self):
-        """Rebuild per-shard host residency flags from the device tags."""
-        V = self.num_vertices
-        for k, st in enumerate(self.states):
-            tags = np.asarray(st.tags).reshape(self.num_ranks, -1)
-            flags = np.zeros((self.num_ranks, V), bool)
-            for r in range(self.num_ranks):
-                t = tags[r][(tags[r] >= 0) & (tags[r] < V)]
-                flags[r, t] = True
-            self.resident[k] = flags
-
-    def expandable_masks(self, rank: int) -> List[Optional[np.ndarray]]:
-        """``expandable[k]`` over rank's VID_p (solids + halos): a node is a
-        leaf iff its ``h^k`` is resident in THIS shard's cache.  Halos are
-        leaves regardless; a resident halo additionally skips the wire."""
-        if not self.cfg.enabled:
-            return [None] * (self.num_layers + 1)
-        vo = self._vid_p_to_o[rank]
-        return [None] + [~r[rank][vo] for r in self.resident]
-
-    def output_resident(self, rank: int, vid_o: int) -> bool:
-        """Router fast path: is the final-layer embedding on the owner?"""
-        return bool(self.resident[self.num_layers - 1][rank, vid_o])
-
-    # -- warm / store -------------------------------------------------------
-    def warm(self, embeddings: Sequence[np.ndarray], vids,
-             chunk: int = 4096,
-             layers: Optional[Sequence[int]] = None) -> int:
-        """Store global offline embeddings of ``vids`` into their owner
-        shards; returns vertices stored per layer.  ``layers`` restricts
-        which cache layers are warmed (default: all) — warming only the
-        hidden layers keeps queries on the compute path while making every
-        halo gather answerable."""
-        layer_set = set(range(len(self.dims))) if layers is None \
-            else set(layers)
-        vids = np.asarray(vids, np.int64)
-        owner, _ = self.ps.route(vids) if len(vids) else (
-            np.empty(0, np.int64), np.empty(0, np.int64))
-        per_rank = [vids[owner == r] for r in range(self.num_ranks)]
-        rounds = max((len(v) for v in per_rank), default=0)
-        for s in range(0, max(rounds, 1), chunk):
-            batch = np.full((self.num_ranks, chunk), -1, np.int64)
-            for r, pv in enumerate(per_rank):
-                seg = pv[s:s + chunk]
-                batch[r, :len(seg)] = seg
-            if not (batch >= 0).any():
-                continue
-            bj = jnp.asarray(batch, jnp.int32)
-            for k, emb in enumerate(embeddings):
-                if k not in layer_set:
-                    continue
-                emb = np.asarray(emb)
-                vals = emb[np.maximum(batch, 0)] * (batch >= 0)[..., None]
-                self.states[k] = self._vstore(
-                    self.states[k], bj, jnp.asarray(vals, jnp.float32))
-        self.sync_host()
-        return len(vids)
-
-    # -- counters / metrics -------------------------------------------------
-    def record(self, hits: np.ndarray, lookups: np.ndarray):
-        self.hits += hits.astype(np.int64)
-        self.lookups += lookups.astype(np.int64)
-
-    def record_halo(self, stats: dict):
-        """Accumulate the serve step's per-rank halo-gather counters."""
-        self.halo_seen += int(np.sum(stats["halo_seen"]))
-        self.halo_local += int(np.sum(stats["halo_local"]))
-        self.halo_fetched += int(np.sum(stats["halo_fetched"]))
-        self.halo_requested += int(np.sum(stats["halo_requested"]))
-        self.halo_l0 += int(np.sum(stats["halo_l0"]))
-
-    def reset_counters(self):
-        self.hits[:] = 0
-        self.lookups[:] = 0
-        self.fast_path_hits = 0
-        self.halo_seen = self.halo_local = 0
-        self.halo_fetched = self.halo_requested = self.halo_l0 = 0
-
-    def occupancy(self) -> List[float]:
-        return [float(hec_lib.hec_occupancy(st)) for st in self.states]
-
-    def metrics(self) -> dict:
-        out = {"model_version": self.model_version,
-               "fast_path_hits": self.fast_path_hits,
-               "num_shards": self.num_ranks,
-               "halo_seen": self.halo_seen,
-               "halo_local_hits": self.halo_local,
-               "halo_fetched": self.halo_fetched,
-               "halo_requested": self.halo_requested,
-               "halo_l0_mirror": self.halo_l0,
-               "cached_halo_frac": (
-                   self.halo_local / self.halo_seen if self.halo_seen
-                   else 0.0)}
-        for k in range(self.num_layers):
-            layer = k + 1
-            out[f"hits_l{layer}"] = int(self.hits[k])
-            out[f"lookups_l{layer}"] = int(self.lookups[k])
-            out[f"hit_rate_l{layer}"] = (
-                float(self.hits[k]) / max(int(self.lookups[k]), 1))
-            out[f"occupancy_l{layer}"] = float(
-                hec_lib.hec_occupancy(self.states[k]))
-        return out
-
-    # -- invalidation -------------------------------------------------------
-    def on_model_update(self) -> int:
-        """Drop every cached line on every shard (new checkpoint)."""
-        self.model_version += 1
-        self._reset_states()
-        return self.model_version
+        super().__init__(dims, len(ps.owner), cfg=cfg, ps=ps)

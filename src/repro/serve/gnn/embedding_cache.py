@@ -1,123 +1,25 @@
-"""HEC-backed serving cache: per-layer historical embeddings for inference.
+"""HEC-backed serving cache — a thin policy wrapper over the unified
+``repro.cache.hec.EmbeddingCache`` (PR 4).
 
-Reuses the training-side set-associative HEC state (``core/hec.py``) — one
-``HECState`` per GNN layer output ``h^k`` for ``k = 1..L`` (``L`` being the
-final logits/output layer).  Serving differs from training in three ways:
-
-  * no life-span ticks: entries stay valid until evicted (OCF within a set)
-    or explicitly invalidated by a model-version bump,
-  * a **host residency mirror** — a bool array per layer over vertex ids,
-    rebuilt from ``state.tags`` after every store batch — lets the request
-    scheduler make *sampling* decisions from cache contents: a vertex whose
-    layer-``k`` embedding is resident becomes a leaf of the sampled block
-    (its subtree is never expanded), which is where the serving win comes
-    from.  The mirror is maintained as a strict subset of device residency
-    (flags are rebuilt from the authoritative device tags, and all lookups
-    of a microbatch precede all of its stores), so a leaf is always backed
-    by a device hit,
-  * hit/miss/occupancy counters are accumulated for metrics.
-
-Invalidation: ``on_model_update()`` bumps ``model_version`` and drops every
-cached line — cached embeddings are functions of the parameters, so a new
-checkpoint makes them all stale at once.
+One ``HECState`` per GNN layer output ``h^k`` for ``k = 1..L``, tags in
+the single partition's local vertex id space, no rank stacking.  Serving
+differs from training in three ways (all implemented by the unified
+cache): no life-span ticks (entries live until OCF eviction or a
+model-version bump), a host residency mirror driving the sampler's leaf
+decisions, and hit/miss/occupancy counters.  See ``repro/cache/hec.py``
+for the semantics; every cache state transition lives there.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import List, Optional, Sequence
+from typing import Optional, Sequence
 
-import numpy as np
-
-from repro.core import hec as hec_lib
+from repro.cache.hec import (EmbeddingCache,  # noqa: F401 (re-export)
+                             ServeCacheConfig)
 
 
-@dataclasses.dataclass(frozen=True)
-class ServeCacheConfig:
-    """Serving-cache parameters (per layer; mirrors training ``HECConfig``)."""
-    cache_size: int = 32768        # entries per layer
-    ways: int = 8                  # set-associativity
-    enabled: bool = True           # False: serve every query by full compute
-
-    def __post_init__(self):
-        assert self.cache_size % self.ways == 0
-
-
-class ServingCache:
-    """Per-layer HEC states + host residency mirror + counters."""
+class ServingCache(EmbeddingCache):
+    """Single-partition serving policy: per-layer states + host mirror."""
 
     def __init__(self, dims: Sequence[int], num_vertices: int,
                  cfg: Optional[ServeCacheConfig] = None):
-        self.cfg = cfg or ServeCacheConfig()
-        self.dims = list(dims)                 # dims of h^1 .. h^L
-        self.num_vertices = num_vertices
-        self.model_version = 0
-        self._reset_states()
-        self.hits = np.zeros(len(dims), np.int64)
-        self.lookups = np.zeros(len(dims), np.int64)
-        self.fast_path_hits = 0                # queries answered w/o compute
-
-    def _reset_states(self):
-        self.states = [hec_lib.hec_init(self.cfg.cache_size, self.cfg.ways, d)
-                       for d in self.dims]
-        self.resident = [np.zeros(self.num_vertices, bool)
-                         for _ in self.dims]
-
-    @property
-    def num_layers(self) -> int:
-        return len(self.dims)
-
-    # -- residency mirror ---------------------------------------------------
-    def sync_host(self):
-        """Rebuild the host residency flags from the device tags.
-
-        Called after every store batch; between a sync and the next store
-        the flags are exact, so sampling decisions made from them are always
-        backed by a device hit."""
-        for k, st in enumerate(self.states):
-            tags = np.asarray(st.tags).ravel()
-            flags = np.zeros(self.num_vertices, bool)
-            t = tags[(tags >= 0) & (tags < self.num_vertices)]
-            flags[t] = True
-            self.resident[k] = flags
-
-    def expandable_masks(self) -> List[Optional[np.ndarray]]:
-        """``expandable[k]`` for ``sample_blocks_vectorized``: a node at
-        layer ``k`` is a leaf iff its ``h^k`` is cache-resident."""
-        if not self.cfg.enabled:
-            return [None] * (self.num_layers + 1)
-        return [None] + [~r for r in self.resident]
-
-    # -- counters / metrics -------------------------------------------------
-    def record(self, hits: np.ndarray, lookups: np.ndarray):
-        self.hits += hits.astype(np.int64)
-        self.lookups += lookups.astype(np.int64)
-
-    def reset_counters(self):
-        """Zero hit/lookup/fast-path counters (cache contents untouched) —
-        call between measurement windows."""
-        self.hits[:] = 0
-        self.lookups[:] = 0
-        self.fast_path_hits = 0
-
-    def occupancy(self) -> List[float]:
-        return [float(hec_lib.hec_occupancy(st)) for st in self.states]
-
-    def metrics(self) -> dict:
-        out = {"model_version": self.model_version,
-               "fast_path_hits": self.fast_path_hits}
-        for k in range(self.num_layers):
-            layer = k + 1
-            out[f"hits_l{layer}"] = int(self.hits[k])
-            out[f"lookups_l{layer}"] = int(self.lookups[k])
-            out[f"hit_rate_l{layer}"] = (
-                float(self.hits[k]) / max(int(self.lookups[k]), 1))
-            out[f"occupancy_l{layer}"] = float(
-                hec_lib.hec_occupancy(self.states[k]))
-        return out
-
-    # -- invalidation -------------------------------------------------------
-    def on_model_update(self) -> int:
-        """Model-version bump: every cached embedding is stale — drop all."""
-        self.model_version += 1
-        self._reset_states()
-        return self.model_version
+        super().__init__(dims, num_vertices, cfg=cfg)

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import hec as hec_lib
+from repro.cache import hec as hec_lib
 from repro.graph.partition import Partition
 from repro.models.gnn import gat as gat_lib
 from repro.models.gnn import graphsage as sage_lib
@@ -162,13 +162,6 @@ def warm_cache(cache, embeddings: List[jnp.ndarray], vids,
 
     ``embeddings`` is the ``layerwise_embeddings`` output; pre-warming the
     output layer lets repeat queries skip sampling AND compute entirely.
-    Returns the number of vertices stored per layer."""
-    vids = np.asarray(vids, np.int64)
-    for k, emb in enumerate(embeddings):
-        st = cache.states[k]
-        for s in range(0, len(vids), chunk):
-            v = vids[s:s + chunk]
-            st = hec_lib.hec_store(st, jnp.asarray(v, jnp.int32), emb[v])
-        cache.states[k] = st
-    cache.sync_host()
-    return len(vids)
+    Returns the number of vertices stored per layer.  (Delegates to the
+    unified cache's ``warm``; kept for API compatibility.)"""
+    return cache.warm(embeddings, vids, chunk=chunk)

@@ -47,7 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import hec as hec_lib
+from repro.cache import hec as hec_lib
 from repro.graph.partition import Partition
 from repro.models.gnn import gat as gat_lib
 from repro.models.gnn import graphsage as sage_lib
@@ -329,9 +329,7 @@ class GNNServeScheduler(ServeFrontend):
         if not self.scfg.cache.enabled:
             # baseline mode: every microbatch sees an empty cache, so
             # "disabled" really is pure on-demand sampling + compute
-            states = [hec_lib.hec_init(self.scfg.cache.cache_size,
-                                       self.scfg.cache.ways, d)
-                      for d in self.cache.dims]
+            states = self.cache.init_states()
         out, out_valid, new_states, stats = self._step(
             self.params, states, self.features, mb)
         out = np.asarray(out)

@@ -1,15 +1,21 @@
 """Distributed minibatch GNN training (paper Algorithms 1 & 2).
 
 One shard_map shard on mesh axis "data" == one paper "rank".  Per rank:
-graph partition, per-layer HECs, db_halo — stacked [R, ...] arrays sharded
-on the leading axis.  Model params are replicated; gradients are psum'ed
-(the paper's blocking All-Reduce).
+graph partition, per-layer HECs, exchange-plan tables — stacked [R, ...]
+arrays sharded on the leading axis.  Model params are replicated;
+gradients are psum'ed (the paper's blocking All-Reduce).
 
-Asynchronous Embedding Push (AEP): the all_to_all push computed at step k
-is carried in a delay-``d`` in-flight buffer and HECStore'd at step k+d —
-the exact bounded-staleness semantics of the paper's MPI AlltoallAsync +
-comm_wait, expressed functionally (XLA/TPU overlaps the in-step collective
-with compute; the *semantic* delay is reproduced bit-exactly).
+All halo communication goes through ``repro.comm.HaloExchangeEngine``
+over a static :class:`~repro.comm.plan.ExchangePlan` built once per
+partitioning: the Asynchronous Embedding Push (one fused all_to_all whose
+result is carried in a delay-``d`` in-flight buffer and HECStore'd at step
+k+d — the exact bounded-staleness semantics of the paper's MPI
+AlltoallAsync + comm_wait), and the sync-baseline blocking fetch.  With
+``overlap=True`` (default, the paper's scheme) the push is dispatched
+between the forward and backward passes so XLA overlaps the collective
+with backward compute; ``overlap=False`` pushes inline after the backward.
+Both modes move identical bits, so model params bit-match
+(pinned in ``tests/test_comm.py``).
 
 Modes:
   aep  — paper: HEC + delayed push (DistGNN-MB)
@@ -25,15 +31,17 @@ synchronous reference path.
 from __future__ import annotations
 
 import dataclasses
-from typing import List
+from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.cache import hec as hec_lib
+from repro.comm.engine import HaloExchangeEngine
+from repro.comm.plan import _pad_stack, build_exchange_plan
 from repro.configs.gnn import GNNConfig
-from repro.core import hec as hec_lib
 from repro.graph.partition import PartitionSet
 from repro.graph.sampling import sample_blocks
 from repro.pipeline.staging import MinibatchPipeline
@@ -43,62 +51,27 @@ from repro.models.gnn import graphsage as sage_lib
 from repro.train import optimizer as opt_lib
 from repro.utils import compat
 
-_SENTINEL = np.int32(2 ** 30)    # sorts after every real VID_o
-
 
 # ---------------------------------------------------------------------------
 # host-side data preparation
 # ---------------------------------------------------------------------------
-def _pad_stack(arrays, pad_value=0, dtype=None):
-    n = max(len(a) for a in arrays)
-    rest = arrays[0].shape[1:]
-    out = np.full((len(arrays), n) + rest, pad_value,
-                  dtype or arrays[0].dtype)
-    for i, a in enumerate(arrays):
-        out[i, :len(a)] = a
-    return out
-
-
 def build_dist_data(ps: PartitionSet, cfg: GNNConfig) -> dict:
-    R = ps.num_parts
+    """Stacked per-rank device tables: features/labels/id maps plus the
+    static exchange-plan tables (db_halo, push_mask, sorted owner tables)
+    the ``HaloExchangeEngine`` consumes — all computed once per
+    partitioning, never per step."""
+    plan_tables = build_exchange_plan(ps, host_indices=False).device_tables()
     feats = _pad_stack([p.features for p in ps.parts], 0.0)
     labels = _pad_stack([p.labels.astype(np.int32) for p in ps.parts], 0)
     num_solid = np.array([p.num_solid for p in ps.parts], np.int32)
     vid_o = _pad_stack([p.vid_p_to_o().astype(np.int32) for p in ps.parts], -1)
-    # db_halo rows stay sorted: pad with a large sentinel
-    dbs = [[ps.db_halo(i, j) for j in range(R)] for i in range(R)]
-    D = max(1, max(len(d) for row in dbs for d in row))
-    db_halo = np.full((R, R, D), _SENTINEL, np.int32)
-    for i in range(R):
-        for j in range(R):
-            db_halo[i, j, :len(dbs[i][j])] = dbs[i][j]
-    svids, sidx = solid_lookup_tables(ps)
     return {
         "features": jnp.asarray(feats),
         "labels": jnp.asarray(labels),
         "num_solid": jnp.asarray(num_solid),
         "vid_o": jnp.asarray(vid_o),
-        "db_halo": jnp.asarray(db_halo),
-        "solid_sorted_vids": jnp.asarray(svids),
-        "solid_sorted_idx": jnp.asarray(sidx),
+        **plan_tables,
     }
-
-
-def solid_lookup_tables(ps: PartitionSet):
-    """Per-rank sorted owner tables: ``(vids [R, Smax], idx [R, Smax])``.
-
-    ``vids[r]`` is rank r's solid VID_o sorted ascending (sentinel-padded);
-    ``idx[r]`` the matching solid VID_p via ``PartitionSet.route`` — so any
-    rank can answer "which feature/embedding row is VID_o v?" with one
-    searchsorted + gather.  Shared by the trainer's sync-mode fetch and the
-    serve-side halo gather."""
-    svids, sidx = [], []
-    for p in ps.parts:
-        vs = np.sort(p.solid_vids)
-        _, li = ps.route(vs)
-        svids.append(vs.astype(np.int32))
-        sidx.append(li.astype(np.int32))
-    return (_pad_stack(svids, _SENTINEL), _pad_stack(sidx, 0))
 
 
 def sample_step(ps: PartitionSet, cfg: GNNConfig, seed_lists, rng) -> dict:
@@ -166,18 +139,6 @@ def layer_dims(cfg: GNNConfig) -> List[int]:
     return [cfg.feat_dim] + [hid] * (cfg.num_layers - 1)
 
 
-def aep_bytes_per_step(cfg: GNNConfig, num_ranks: int) -> int:
-    """Analytic AEP all_to_all payload per rank per step."""
-    dims = layer_dims(cfg)
-    nc = cfg.hec.push_limit
-    return num_ranks * nc * (4 * len(dims) + 4 * max(dims) * len(dims))
-
-
-def sync_bytes_per_step(cfg: GNNConfig, num_ranks: int) -> int:
-    nc = cfg.hec.push_limit
-    return num_ranks * nc * (4 + 4 * (cfg.feat_dim + 1))
-
-
 # ---------------------------------------------------------------------------
 # the trainer
 # ---------------------------------------------------------------------------
@@ -188,6 +149,14 @@ class DistTrainer:
     num_ranks: int
     mode: str = "aep"           # aep | sync | drop
     use_kernel: bool = False
+    overlap: bool = True        # aep: dispatch push before the backward pass
+    engine: Optional[HaloExchangeEngine] = None
+
+    def __post_init__(self):
+        if self.engine is None:
+            self.engine = HaloExchangeEngine(
+                self.num_ranks, self.cfg.num_layers,
+                self.cfg.hec.push_limit, self.cfg.hec.delay)
 
     def init_state(self, key, dist_data=None):
         cfg = self.cfg
@@ -195,19 +164,12 @@ class DistTrainer:
         params = init_model_params(key, cfg)
         opt_state = opt_lib.adam_init(params)
         dims = layer_dims(cfg)
-        dmax = max(dims)
         hec = [
             jax.vmap(lambda _: hec_lib.hec_init(
                 cfg.hec.cache_size, cfg.hec.ways, dims[l]))(jnp.arange(R))
             for l in range(cfg.num_layers)
         ]
-        nc = cfg.hec.push_limit
-        d = cfg.hec.delay
-        L = cfg.num_layers
-        inflight = {
-            "tags": jnp.full((R, d, R, L, nc), -1, jnp.int32),
-            "embs": jnp.zeros((R, d, R, L, nc, dmax), jnp.float32),
-        }
+        inflight = self.engine.inflight_init(max(dims))
         return {"params": params, "opt_state": opt_state, "hec": hec,
                 "inflight": inflight, "step": jnp.zeros((), jnp.int32)}
 
@@ -229,11 +191,8 @@ class DistTrainer:
 
         # (1) HEC tick + consume the delayed push (paper lines 8-9)
         if self.mode == "aep":
-            hec = [hec_lib.hec_tick(h, cfg.hec.life_span) for h in hec]
-            for l in range(L):
-                tl = inflight["tags"][0, :, l].reshape(-1)
-                el = inflight["embs"][0, :, l, :, :dims[l]].reshape(-1, dims[l])
-                hec[l] = hec_lib.hec_store(hec[l], tl, el)
+            hec = self.engine.consume_push(hec, inflight, dims,
+                                           cfg.hec.life_span)
 
         # (2) layer-0 inputs
         nodes0 = mb["layer_nodes"][0]
@@ -253,7 +212,8 @@ class DistTrainer:
             valid0 = valid0 | use0
             hits0 = (jnp.sum(use0), jnp.sum(is_halo0))
         elif self.mode == "sync":
-            h0, got = self._sync_fetch(data, mb, vid_o_nodes[0], is_halo0, h0)
+            h0, got = self.engine.sync_fetch(data, vid_o_nodes[0],
+                                             is_halo0, h0)
             valid0 = valid0 | got
             hits0 = (got.sum(), jnp.sum(is_halo0))
         else:
@@ -298,8 +258,28 @@ class DistTrainer:
             correct = ((jnp.argmax(logits, -1) == labels) & lmask).sum()
             return loss, (nll.sum(), correct, n_valid, captured, hits)
 
-        (loss, (nll_sum, correct, n_valid, captured, hits)), grads = \
-            jax.value_and_grad(loss_fn, has_aux=True)(params)
+        # (3) backward + AEP push (paper lines 14-24).  The push depends
+        # only on forward activations, so with overlap=True it is
+        # dispatched BETWEEN the forward and backward passes (the paper's
+        # AlltoallAsync-then-comm_wait): XLA overlaps the collective with
+        # backward compute.  overlap=False keeps the legacy inline push
+        # after the backward — both move identical bits, so model params
+        # bit-match across the two schedules.
+        push_stats = None
+        if self.mode == "aep" and self.overlap:
+            loss, vjp_fn, (nll_sum, correct, n_valid, captured, hits) = \
+                jax.vjp(loss_fn, params, has_aux=True)
+            inflight, push_stats = self.engine.aep_push(
+                data, mb, captured, vid_o_nodes, num_solid, inflight, seed,
+                dims, dmax, me)
+            grads, = vjp_fn(jnp.ones_like(loss))
+        else:
+            (loss, (nll_sum, correct, n_valid, captured, hits)), grads = \
+                jax.value_and_grad(loss_fn, has_aux=True)(params)
+            if self.mode == "aep":
+                inflight, push_stats = self.engine.aep_push(
+                    data, mb, captured, vid_o_nodes, num_solid, inflight,
+                    seed, dims, dmax, me)
         # gradients and metrics are example-weighted across ranks, so ranks
         # padded with an empty seed batch (epoch-length imbalance) neither
         # dilute the update toward zero nor skew the numbers: the all-reduce
@@ -313,18 +293,17 @@ class DistTrainer:
         loss_m = jax.lax.psum(nll_sum, "data") / denom
         acc_m = jax.lax.psum(correct, "data") / denom
 
-        # (3) AEP push (paper lines 14-24) + all_to_all
-        if self.mode == "aep":
-            inflight = self._aep_push(data, mb, captured, vid_o_nodes,
-                                      num_solid, inflight, seed, dims, dmax,
-                                      me)
-
         params, opt_state, diag = opt_lib.adam_update(
             grads, opt_state, params,
             opt_lib.AdamConfig(lr=cfg.lr, grad_clip=1.0))
 
         metrics = {"loss": loss_m, "acc": acc_m, "examples": examples,
                    "grad_norm": diag["grad_norm"]}
+        if push_stats is not None:
+            metrics["aep_push_rows"] = jax.lax.psum(
+                push_stats["push_rows"], "data")
+            metrics["aep_push_bytes"] = jax.lax.psum(
+                push_stats["push_bytes"], "data")
         for l, (h_cnt, t_cnt) in enumerate(hits):
             metrics[f"hec_hits_l{l}"] = jax.lax.psum(h_cnt, "data")
             metrics[f"hec_halos_l{l}"] = jax.lax.psum(t_cnt, "data")
@@ -335,90 +314,6 @@ class DistTrainer:
         exp = lambda t: jax.tree_util.tree_map(lambda a: a[None], t)
         return (params, opt_state, [exp(h) for h in hec], exp(inflight),
                 metrics)
-
-    def _aep_push(self, data, mb, captured, vid_o_nodes, num_solid,
-                  inflight, seed, dims, dmax, me):
-        cfg = self.cfg
-        R = self.num_ranks
-        L = cfg.num_layers
-        nc = cfg.hec.push_limit
-        nodes0 = mb["layer_nodes"][0]
-        mask0 = mb["node_mask"][0]
-        vid0 = vid_o_nodes[0]
-        is_solid = (nodes0 < num_solid) & (nodes0 >= 0) & mask0
-        N0 = nodes0.shape[0]
-        key = jax.random.fold_in(
-            jax.random.fold_in(jax.random.PRNGKey(7), seed), me)
-        u = jax.random.uniform(key, (R, N0), minval=1e-6, maxval=1.0)
-
-        db = data["db_halo"]                        # [R, D] sorted + sentinel
-        tags_out, pos_out = [], []
-        for j in range(R):
-            dbj = db[j]
-            loc = jnp.clip(jnp.searchsorted(dbj, vid0), 0, dbj.shape[0] - 1)
-            member = (dbj[loc] == vid0) & is_solid
-            score = jnp.where(member, u[j], -1.0)
-            topv, topi = jax.lax.top_k(score, nc)
-            ok = topv > 0
-            tags_out.append(jnp.where(ok, vid0[topi], -1))
-            pos_out.append(jnp.where(ok, topi, 0))
-        base_tags = jnp.stack(tags_out)             # [R, nc]
-        pos = jnp.stack(pos_out)                    # [R, nc]
-        base_ok = base_tags >= 0
-
-        tags = jnp.zeros((R, L, nc), jnp.int32)
-        embs = jnp.zeros((R, L, nc, dmax), jnp.float32)
-        for l in range(L):
-            h_l, valid_l = captured[l]
-            n_l = h_l.shape[0]
-            p_cl = jnp.clip(pos, 0, n_l - 1)
-            ok = base_ok & (pos < n_l) & valid_l[p_cl]
-            e = jnp.where(ok[..., None], h_l[p_cl].astype(jnp.float32), 0.0)
-            embs = embs.at[:, l, :, :dims[l]].set(e)
-            tags = tags.at[:, l].set(jnp.where(ok, base_tags, -1))
-
-        rec_tags = jax.lax.all_to_all(tags, "data", 0, 0)
-        rec_embs = jax.lax.all_to_all(embs, "data", 0, 0)
-        return {
-            "tags": jnp.concatenate(
-                [inflight["tags"][1:], rec_tags[None]], 0),
-            "embs": jnp.concatenate(
-                [inflight["embs"][1:], rec_embs[None]], 0),
-        }
-
-    def _sync_fetch(self, data, mb, vid0, is_halo0, h0):
-        """DistDGL-like blocking fetch of fresh layer-0 halo features."""
-        cfg = self.cfg
-        R = self.num_ranks
-        nc = cfg.hec.push_limit
-        N0 = vid0.shape[0]
-        # request the first nc halos (by position) from every rank; the
-        # owner answers.  (DistDGL prefetches remote features for the whole
-        # sampled neighborhood right after minibatch creation.)
-        score = jnp.where(is_halo0,
-                          (jnp.arange(N0, 0, -1, dtype=jnp.float32)), -1.0)
-        topv, topi = jax.lax.top_k(score, nc)
-        ok = topv > 0
-        req_row = jnp.where(ok, vid0[topi], -1)
-        req = jnp.broadcast_to(req_row, (R, nc))
-        pos_row = jnp.where(ok, topi, 0)
-        got_req = jax.lax.all_to_all(req, "data", 0, 0)     # [R_from, nc]
-        sorted_vids = data["solid_sorted_vids"]
-        S = sorted_vids.shape[0]
-        loc = jnp.clip(jnp.searchsorted(sorted_vids, got_req), 0, S - 1)
-        own = (sorted_vids[loc] == got_req) & (got_req >= 0)
-        feats = data["features"][data["solid_sorted_idx"][loc]] \
-            * own[..., None]
-        resp = jax.lax.all_to_all(
-            jnp.concatenate([feats, own[..., None].astype(jnp.float32)], -1),
-            "data", 0, 0)                                   # [R, nc, F+1]
-        got_feats, got_ok = resp[..., :-1], resp[..., -1] > 0.5
-        # each requested halo answered by exactly its owner -> sum over ranks
-        add = (got_feats * got_ok[..., None]).sum(0)        # [nc, F]
-        any_ok = got_ok.any(0)                              # [nc]
-        h0 = h0.at[pos_row].add(jnp.where(any_ok[:, None], add, 0.0))
-        got = jnp.zeros(N0, bool).at[pos_row].max(any_ok)
-        return h0, got & is_halo0
 
     # -- public API ----------------------------------------------------------
     def _resolve_pipeline(self, ps, seed0, pipeline):
