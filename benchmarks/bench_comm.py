@@ -1,6 +1,6 @@
-"""Halo-exchange engine benchmark (repro.comm subsystem, PR 4).
+"""Halo-exchange engine benchmark (repro.comm subsystem, PR 4 + PR 5).
 
-Measures the three wins of the unified exchange path at R=4:
+Measures the wins of the unified exchange path at R=4:
 
   * **exchange-plan build** — the one-time host cost that replaces every
     per-step index computation (db membership, sorted owner tables,
@@ -13,7 +13,15 @@ Measures the three wins of the unified exchange path at R=4:
     trainer payload shapes),
   * **compute-communication overlap** — full training steps with the push
     dispatched between forward and backward (``overlap=True``) vs inline
-    after the backward, plus the isolated push-collective latency.
+    after the backward, plus the isolated push-collective latency,
+  * **hot-vertex tier (PR 5)** — remote-fetch rows with the replicated
+    hub tier on vs off: the plan's degree-weighted appearance model
+    (``ExchangePlan.modeled_remote_rows``) over a refresh window, plus
+    measured training steps (pairwise push rows shrink, the broadcast
+    refresh rides the same collective, tier hits replace HEC hits).
+    The modeled comparison is a CI gate even at smoke scale: the tier
+    must cut modeled remote rows or the optimization has regressed to a
+    no-op.
 
 This container time-shares all host devices on a couple of cores and XLA
 CPU serializes collectives with compute, so measured overlap wall-clock is
@@ -34,7 +42,7 @@ import os
 import subprocess
 import sys
 
-from benchmarks.common import emit
+from benchmarks.common import emit, result
 
 _SCRIPT = r"""
 import os, sys, json, time
@@ -43,7 +51,7 @@ os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={R}"
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.comm.engine import HaloExchangeEngine
-from repro.comm.plan import build_exchange_plan
+from repro.comm.plan import build_exchange_plan, partition_degrees
 from repro.configs.gnn import HECConfig, small_gnn_config
 from repro.graph import partition_graph, synthetic_graph
 from repro.launch.mesh import make_gnn_mesh
@@ -147,7 +155,8 @@ def step_time(mode, overlap):
     state = tr.init_state(jax.random.key(0))
     stepf = tr.make_step(donate=False)
     call = lambda: stepf(state["params"], state["opt_state"], state["hec"],
-                         state["inflight"], dd, mb, jnp.uint32(0))
+                         state["hot"], state["inflight"], dd, mb,
+                         jnp.uint32(0))
     return timeit(lambda: jax.block_until_ready(call()[-1]["loss"]), REPS)
 
 t_overlap = step_time("aep", True)
@@ -158,6 +167,39 @@ compute_s = max(t_overlap - t_push, t_drop)  # step compute the push hides under
 hidden_modeled = min(t_push, compute_s) / t_push
 hidden_measured = (t_inline - t_overlap) / t_push
 
+# -- (4) hot-vertex tier: heavy-tail remote-fetch rows ----------------------
+# modeled: degree-weighted appearance per replica over a refresh window
+# (replicas refresh once per window, fetches recur every round); measured:
+# one epoch with the tier on vs off — pairwise push rows shrink (hot vids
+# leave the contract) while the broadcast refresh rides the SAME fused
+# collective, and tier hits replace HEC hits for hub halos.
+HOT = V // 2
+deg = partition_degrees(ps)
+plan_hot = build_exchange_plan(ps, hot_size=HOT)
+W = 16                                  # rounds per refresh window
+model = plan_hot.modeled_remote_rows(deg, rounds=W, refresh_every=W)
+
+def epoch_stats(hot):
+    hec = HECConfig(cache_size=8192, ways=4, life_span=2, push_limit=256,
+                    delay=1, hot_size=HOT if hot else 0,
+                    hot_budget=256 if hot else 0)
+    c = small_gnn_config("graphsage", batch_size=64, feat_dim=32,
+                         num_classes=8, hec=hec)
+    ddh = build_dist_data(ps, c)
+    tr = DistTrainer(cfg=c, mesh=mesh, num_ranks=R, mode="aep")
+    st = tr.init_state(jax.random.key(0), ddh)
+    st, hist = tr.train_epochs(ps, ddh, st, 2)
+    m = hist[-1]
+    return {"push_rows": m.get("aep_push_rows", 0.0),
+            "hot_push_rows": m.get("hot_push_rows", 0.0),
+            "hot_hits": sum(v for k, v in m.items()
+                            if k.startswith("hot_hits_l")),
+            "hit_rate_l0": m.get("hec_hits_l0", 0.0)
+            / max(m.get("hec_halos_l0", 1.0), 1.0)}
+
+tier_on = epoch_stats(True)
+tier_off = epoch_stats(False)
+
 print("RESULT" + json.dumps({
     "ranks": R, "edge_cut_frac": ps.edge_cut_frac,
     "t_plan_build": t_plan,
@@ -166,7 +208,10 @@ print("RESULT" + json.dumps({
     "push_bytes_per_rank": push_bytes,
     "t_step_overlap": t_overlap, "t_step_inline": t_inline,
     "t_step_drop": t_drop, "t_push": t_push,
-    "hidden_modeled": hidden_modeled, "hidden_measured": hidden_measured}))
+    "hidden_modeled": hidden_modeled, "hidden_measured": hidden_measured,
+    "hot_size": plan_hot.hot_size,
+    "remote_rows_model": model,
+    "tier_on": tier_on, "tier_off": tier_off}))
 """
 
 
@@ -199,11 +244,32 @@ def main(smoke=False):
          f"push_us={r['t_push']*1e6:.1f};"
          f"hidden_modeled={r['hidden_modeled']:.2f};"
          f"hidden_measured={r['hidden_measured']:.2f}")
+    model = r["remote_rows_model"]
+    on, off = r["tier_on"], r["tier_off"]
+    emit("comm_hot_tier_remote_rows", model["hot_rows"],
+         f"baseline_rows={model['baseline_rows']:.0f};"
+         f"reduction={model['reduction']:.2f};"
+         f"hot_size={r['hot_size']};window={model['rounds']}")
+    emit("comm_hot_tier_push", on["push_rows"],
+         f"push_rows_off={off['push_rows']:.0f};"
+         f"hot_broadcast_rows={on['hot_push_rows']:.0f};"
+         f"tier_hits_per_step={on['hot_hits']:.0f};"
+         f"hit_rate_l0_on={on['hit_rate_l0']:.2f};"
+         f"hit_rate_l0_off={off['hit_rate_l0']:.2f}")
+    # PERF GATE (runs in --smoke too): the tier must cut modeled remote
+    # rows vs tier-disabled on the synthetic power-law graph — otherwise
+    # the heavy-tail optimization has silently regressed to a no-op
+    assert model["hot_rows"] < model["baseline_rows"], \
+        f"hot tier must reduce modeled remote rows: " \
+        f"{model['hot_rows']:.0f} vs {model['baseline_rows']:.0f}"
     if not smoke:       # wall-clock bars don't gate the tiny-scale CI pass
         assert r["hidden_modeled"] >= 0.5, \
             f"overlap must hide >= 50% of the push latency (modeled), " \
             f"got {r['hidden_modeled']:.2f}"
-    print("RESULT" + json.dumps(r))
+        assert model["reduction"] >= 0.5, \
+            f"hot tier must cut modeled remote-fetch rows >= 50% over a " \
+            f"{model['rounds']}-round window, got {model['reduction']:.2f}"
+    result(r)
 
 
 if __name__ == "__main__":

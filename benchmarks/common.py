@@ -1,9 +1,21 @@
-"""Benchmark helpers: timing + CSV emission."""
+"""Benchmark helpers: timing, CSV emission, and machine-readable result
+artifacts.
+
+Every suite's ``emit`` rows and its final ``result`` payload are recorded
+under the active suite name (set by ``benchmarks/run.py``); at the end of
+a run, ``write_artifacts`` writes one ``BENCH_<suite>.json`` per suite so
+the perf trajectory is machine-readable across PRs (CI uploads the files
+as a workflow artifact)."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
+
+_active: str | None = None
+_suites: dict = {}
 
 
 def time_fn(fn, *args, warmup=2, iters=10):
@@ -19,5 +31,36 @@ def time_fn(fn, *args, warmup=2, iters=10):
     return times[len(times) // 2] * 1e6
 
 
+def begin_suite(name: str):
+    """Route subsequent ``emit``/``result`` calls to this suite's record."""
+    global _active
+    _active = name
+    _suites.setdefault(name, {"rows": [], "result": None})
+
+
 def emit(name: str, us: float, derived: str = ""):
     print(f"{name},{us:.1f},{derived}")
+    if _active is not None:
+        _suites[_active]["rows"].append(
+            {"name": name, "us_per_call": us, "derived": derived})
+
+
+def result(payload: dict):
+    """Print the suite's ``RESULT{...}`` line AND record the payload for
+    the JSON artifact (replaces the bare ``print("RESULT"+json.dumps)``)."""
+    print("RESULT" + json.dumps(payload))
+    if _active is not None:
+        _suites[_active]["result"] = payload
+
+
+def write_artifacts(out_dir: str) -> list:
+    """One ``BENCH_<suite>.json`` per recorded suite; returns the paths."""
+    os.makedirs(out_dir, exist_ok=True)
+    paths = []
+    for name, rec in _suites.items():
+        path = os.path.join(out_dir, f"BENCH_{name}.json")
+        with open(path, "w") as f:
+            json.dump({"suite": name, **rec}, f, indent=2, sort_keys=True)
+            f.write("\n")
+        paths.append(path)
+    return paths

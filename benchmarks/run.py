@@ -14,12 +14,21 @@ Prints ``name,us_per_call,derived`` CSV lines.
   roofline                   dry-run roofline table (deliverable g)
 
 ``--smoke`` runs every registered benchmark at tiny scale (a CI bit-rot
-guard: each suite must still execute end-to-end, numbers are meaningless).
+guard: each suite must still execute end-to-end, numbers are meaningless —
+except the perf *gates* individual suites assert even at tiny scale, e.g.
+hot-tier modeled remote rows < tier-disabled).  Each suite's rows and
+RESULT payload are additionally written as ``BENCH_<suite>.json`` under
+``--out-dir`` (default ``$BENCH_OUT_DIR`` or ``bench_results``) so the
+perf trajectory is machine-readable across PRs; CI uploads them as a
+workflow artifact.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import traceback
+
+from benchmarks import common
 
 
 def main() -> None:
@@ -28,6 +37,9 @@ def main() -> None:
                     help="run only suites whose name contains this")
     ap.add_argument("--smoke", action="store_true",
                     help="tiny-scale pass over every suite (CI)")
+    ap.add_argument("--out-dir",
+                    default=os.environ.get("BENCH_OUT_DIR", "bench_results"),
+                    help="directory for BENCH_<suite>.json artifacts")
     args = ap.parse_args()
     from benchmarks import (bench_comm, bench_convergence, bench_distdgl,
                             bench_gnn_serve, bench_gnn_serve_dist, bench_hec,
@@ -46,15 +58,20 @@ def main() -> None:
         "roofline": roofline.main,
     }
     print("name,us_per_call,derived")
-    for name, fn in suites.items():
-        if args.only and args.only not in name:
-            continue
-        try:
-            fn(smoke=args.smoke)
-        except Exception as e:
-            traceback.print_exc()
-            print(f"{name},0.0,ERROR={type(e).__name__}")
-            raise SystemExit(1)
+    try:
+        for name, fn in suites.items():
+            if args.only and args.only not in name:
+                continue
+            common.begin_suite(name)
+            try:
+                fn(smoke=args.smoke)
+            except Exception as e:
+                traceback.print_exc()
+                print(f"{name},0.0,ERROR={type(e).__name__}")
+                raise SystemExit(1)
+    finally:
+        for path in common.write_artifacts(args.out_dir):
+            print(f"artifact: {path}")
 
 
 if __name__ == "__main__":

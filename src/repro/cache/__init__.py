@@ -7,9 +7,15 @@ serving, sharded serving — is defined once, in ``repro.cache.hec``.
 """
 from repro.cache.hec import (EmbeddingCache, HECState, ServeCacheConfig,
                              hec_init, hec_load, hec_lookup, hec_occupancy,
-                             hec_search, hec_store, hec_tick)
+                             hec_search, hec_store, hec_tick, set_index)
+from repro.cache.hot_tier import (HotTierCache, HotTierState, tier_init,
+                                  tier_lookup, tier_slots, tier_store,
+                                  tier_tick)
 
 __all__ = [
     "EmbeddingCache", "HECState", "ServeCacheConfig", "hec_init", "hec_load",
     "hec_lookup", "hec_occupancy", "hec_search", "hec_store", "hec_tick",
+    "set_index",
+    "HotTierCache", "HotTierState", "tier_init", "tier_lookup", "tier_slots",
+    "tier_store", "tier_tick",
 ]

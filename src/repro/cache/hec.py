@@ -72,9 +72,16 @@ def hec_init(cache_size: int, ways: int, dim: int,
         values=jnp.zeros((nsets, ways, dim), dtype))
 
 
-def _set_index(vids: jnp.ndarray, nsets: int) -> jnp.ndarray:
+def set_index(vids: jnp.ndarray, nsets: int) -> jnp.ndarray:
+    """VID -> set index (Fibonacci hash).  THE hash of the HEC layout:
+    ``kernels/hec_search.py`` imports this same function object, so the
+    Pallas lookup primitive and the functional ops can never drift
+    (pinned by ``tests/test_comm.py::test_set_index_shared``)."""
     h = (vids.astype(jnp.uint32) * _MIX) >> jnp.uint32(8)
     return (h % jnp.uint32(nsets)).astype(jnp.int32)
+
+
+_set_index = set_index          # internal alias (pre-PR 5 name)
 
 
 def hec_tick(state: HECState, life_span: int) -> HECState:

@@ -1,0 +1,224 @@
+"""Replicated hot-vertex tier — heavy-tail communication elimination.
+
+On power-law graphs a tiny set of hub vertices accounts for most halo
+traffic: a hub is a halo replica on almost every other rank, so its
+embedding is pushed/fetched over and over, pair by pair.  The hot tier
+removes that heavy tail from the pairwise exchange entirely:
+
+  * the ``ExchangePlan`` precomputes a static **hot set** — the top-K
+    highest-degree vertices among those that are halos anywhere — with
+    dense slot indices (``searchsorted`` into the sorted ``hot_vids``
+    table, no hashing, no eviction),
+  * every rank holds a **replica** of all K slots per layer
+    (``HotTierState``: ``values [K, dim]`` + ``age [K]``),
+  * reads are local: a halo row whose VID_o is hot and whose replica slot
+    is fresh is served from the local tier instead of the HEC / the
+    serve-side ``cache_fetch`` all_to_all,
+  * refreshes ride the existing fused AEP push (training) or the owner's
+    store-back/warm broadcast (serving) — no new collectives,
+  * staleness is versioned exactly like the HEC: ``tier_tick`` ages every
+    slot once per iteration and ``tier_lookup`` rejects slots older than
+    the life-span.  A rejected slot means the normal path takes over —
+    in serving that path really answers (HEC lookup + owner
+    ``cache_fetch``), while in training it degrades exactly like an HEC
+    miss (the row is dropped from aggregation; hot vids left the pairwise
+    push contract, so the HEC holds no copy) — either way the paper's
+    bounded staleness/degradation semantics are preserved.
+
+The functional ops mirror ``repro.cache.hec``'s (init/tick/store/lookup
+over a registered-dataclass state) and run inside jit / shard_map; the
+host-side :class:`HotTierCache` is the serving-side object (stacked
+``[R, ...]`` replicas, validity mirror, metrics, model-version drop).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_NEVER = np.int32(2 ** 30)      # age of a never-filled slot (always stale)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class HotTierState:
+    values: jnp.ndarray    # [K, dim]
+    age: jnp.ndarray       # [K] int32, iterations since refresh (_NEVER=empty)
+
+    @property
+    def num_slots(self):
+        return self.age.shape[0]
+
+
+def tier_init(num_slots: int, dim: int, dtype=jnp.float32) -> HotTierState:
+    return HotTierState(
+        values=jnp.zeros((num_slots, dim), dtype),
+        age=jnp.full((num_slots,), _NEVER, jnp.int32))
+
+
+def tier_slots(hot_vids: jnp.ndarray, vids: jnp.ndarray):
+    """vids [m] VID_o -> (slot [m], is_hot [m]).  ``hot_vids`` is the
+    plan's sorted hot-set table; the slot index is dense (its position in
+    the table), so tier storage needs no tags and never evicts."""
+    K = hot_vids.shape[0]
+    slot = jnp.clip(jnp.searchsorted(hot_vids, vids), 0, K - 1)
+    return slot, (hot_vids[slot] == vids) & (vids >= 0)
+
+
+def tier_lookup(state: HotTierState, hot_vids: jnp.ndarray,
+                vids: jnp.ndarray, life_span: Optional[int] = None):
+    """vids [m] -> (hit [m], emb [m, dim]); misses zeroed, loads
+    stop_gradient'ed (replicas are historical embeddings, exactly like
+    HEC loads).  ``life_span=None`` means slots stay fresh until dropped
+    (the serving tier: entries are invalidated by model-version bumps,
+    not by age)."""
+    slot, is_hot = tier_slots(hot_vids, vids)
+    age = state.age[slot]
+    fresh = age < _NEVER if life_span is None else age <= life_span
+    hit = is_hot & fresh
+    emb = jax.lax.stop_gradient(state.values[slot])
+    return hit, jnp.where(hit[:, None], emb, 0.0)
+
+
+def tier_store(state: HotTierState, slots: jnp.ndarray, embs: jnp.ndarray,
+               valid: jnp.ndarray | None = None) -> HotTierState:
+    """Scatter fresh rows into their dense slots (age resets to 0).
+    Invalid rows (slot < 0) scatter out-of-bounds and are dropped."""
+    if valid is None:
+        valid = slots >= 0
+    K = state.num_slots
+    s = jnp.where(valid, slots, K)
+    return HotTierState(
+        values=state.values.at[s].set(embs.astype(state.values.dtype),
+                                      mode="drop"),
+        age=state.age.at[s].set(0, mode="drop"))
+
+
+def tier_tick(state: HotTierState) -> HotTierState:
+    """Advance one iteration: age every slot (saturating, so empty slots
+    never wrap into freshness)."""
+    return HotTierState(values=state.values,
+                        age=jnp.minimum(state.age + 1, _NEVER))
+
+
+# ---------------------------------------------------------------------------
+# serving-side host object: stacked replicas + validity mirror + metrics
+# ---------------------------------------------------------------------------
+class HotTierCache:
+    """Per-layer hot-tier replicas stacked ``[R, K, dim]`` for sharded
+    serving (sharded on the mesh's ``data`` axis like the HEC states).
+
+    Replication policy: every rank carries all K slots; ``warm`` broadcasts
+    the owners' offline embeddings to every replica at once, and the serve
+    step stores freshly computed/fetched hot rows into the *local* replica
+    (per-rank validity — a cold replica simply falls back to the normal
+    ``cache_fetch`` path, bit-identical to running without the tier).
+    Entries never age out (serving embeddings are valid until the model
+    changes); ``on_model_update`` drops every slot on every rank.
+    """
+
+    def __init__(self, dims: Sequence[int], hot_vids: np.ndarray,
+                 num_ranks: int):
+        self.dims = list(dims)
+        self.hot_vids = np.asarray(hot_vids, np.int64)
+        self.num_ranks = num_ranks
+        self.hot_hits = 0              # halo rows served from the local tier
+        self.fast_path_hits = 0        # queries answered from the output slot
+        # dense vid -> slot table: O(1) per-query membership on the
+        # serving frontend's drain loop (scalar searchsorted is too slow
+        # there); sized by the largest hot vid, not the graph
+        size = int(self.hot_vids.max()) + 1 if len(self.hot_vids) else 0
+        self._slot_table = np.full(size, -1, np.int64)
+        if len(self.hot_vids):
+            self._slot_table[self.hot_vids] = np.arange(len(self.hot_vids))
+        self._reset_states()
+
+    @property
+    def num_slots(self) -> int:
+        return len(self.hot_vids)
+
+    @property
+    def num_layers(self) -> int:
+        return len(self.dims)
+
+    def init_states(self) -> List[HotTierState]:
+        K = max(self.num_slots, 1)
+        return [jax.vmap(lambda _: tier_init(K, d))(
+            jnp.arange(self.num_ranks)) for d in self.dims]
+
+    def _reset_states(self):
+        self.states = self.init_states()
+        self.valid = [np.zeros((self.num_ranks, max(self.num_slots, 1)),
+                               bool) for _ in self.dims]
+
+    # -- host mirror ---------------------------------------------------------
+    def sync_host(self):
+        """Mirror per-replica slot validity from the device ages; like the
+        HEC residency mirror, all lookups of a round precede its stores,
+        so a decision made from the mirror is always backed by a hit."""
+        for k, st in enumerate(self.states):
+            self.valid[k] = np.asarray(st.age) < int(_NEVER)
+
+    def slot_of(self, vids: np.ndarray) -> np.ndarray:
+        """VID_o -> dense slot (or -1 when not hot)."""
+        vids = np.asarray(vids, np.int64)
+        if not self.num_slots:
+            return np.full(vids.shape, -1, np.int64)
+        inside = vids < len(self._slot_table)
+        return np.where(inside,
+                        self._slot_table[np.where(inside, vids, 0)], -1)
+
+    def output_resident(self, rank: int, vid_o: int) -> bool:
+        """Fast path: is the final-layer embedding in rank's replica?
+        Called per drained query — one table index, no array building."""
+        if vid_o >= len(self._slot_table):
+            return False
+        s = self._slot_table[vid_o]
+        return bool(s >= 0 and self.valid[self.num_layers - 1][rank, s])
+
+    # -- warm (owner rows broadcast to every replica) -------------------------
+    def warm(self, embeddings: Sequence, vids=None) -> int:
+        """Store offline embeddings of the hot set into EVERY rank's
+        replica (host-side broadcast — prewarm shares the offline pass the
+        HEC warm already ran).  ``vids`` restricts which hot vertices are
+        warmed (default: all K)."""
+        if not self.num_slots:
+            return 0
+        take = self.hot_vids if vids is None else \
+            self.hot_vids[np.isin(self.hot_vids,
+                                  np.asarray(vids, np.int64))]
+        if not len(take):
+            return 0
+        slots = self.slot_of(take)
+        for k, emb in enumerate(embeddings):
+            rows = np.asarray(emb)[take]
+            st = self.states[k]
+            sl = jnp.asarray(slots, jnp.int32)
+            vj = jnp.asarray(rows, jnp.float32)
+            self.states[k] = jax.vmap(
+                lambda s: tier_store(s, sl, vj))(st)
+        self.sync_host()
+        return len(take)
+
+    # -- metrics / invalidation ----------------------------------------------
+    def metrics(self) -> dict:
+        out = {"hot_size": self.num_slots,
+               "hot_hits": self.hot_hits,
+               "hot_fast_path_hits": self.fast_path_hits}
+        for k in range(self.num_layers):
+            out[f"hot_valid_l{k + 1}"] = (
+                float(self.valid[k].mean()) if self.num_slots else 0.0)
+        return out
+
+    def reset_counters(self):
+        self.hot_hits = 0
+        self.fast_path_hits = 0
+
+    def on_model_update(self):
+        """Every replica of every slot is a function of the old params —
+        drop them all (a dropped replica falls back to the normal fetch
+        path until refreshed)."""
+        self._reset_states()

@@ -8,7 +8,8 @@ serve-side per-layer cache fetch, and the exact offline exchange.
 """
 from repro.comm.engine import HaloExchangeEngine
 from repro.comm.plan import (ExchangePlan, build_exchange_plan,
+                             hot_set_tables, partition_degrees,
                              solid_lookup_tables)
 
 __all__ = ["ExchangePlan", "HaloExchangeEngine", "build_exchange_plan",
-           "solid_lookup_tables"]
+           "hot_set_tables", "partition_degrees", "solid_lookup_tables"]

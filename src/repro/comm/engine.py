@@ -36,6 +36,30 @@ outside.  The in-flight queue ADT and the analytic communication byte
 models live in ``repro.core.aep`` (the engine consumes the queue;
 benchmarks consume the byte models); exact per-exchange volumes come from
 ``ExchangePlan.exchange_bytes``.
+
+PR 5 — heavy-tail elimination, both engine-side mechanisms:
+
+  * **hot-vertex tier refresh** (``hot_budget > 0``): the plan's top-K hub
+    vertices leave the pairwise push contract; instead each rank
+    broadcasts up to ``hot_budget`` of its *owned* hot vertices' per-layer
+    embeddings to every rank, piggybacked as one extra segment of the SAME
+    fused all_to_all (identical bytes to every destination — still one
+    collective, no new ops).  Received hot rows ride the same delay-``d``
+    in-flight queue and land in the replicated tier
+    (``repro.cache.hot_tier``), aged by the HEC life-span — a stale
+    replica degrades exactly like an HEC miss (the halo row is dropped
+    from aggregation via the validity mask), so the paper's bounded
+    staleness/degradation semantics carry over; size ``hot_budget *
+    life_span`` to cover the busiest owner's hot vertices (each rank
+    refreshes only hubs it owns — the trainer warns when undersized).
+
+  * **multi-round exchange batching** (``cache_fetch(..., rounds=N)``):
+    N queued serve rounds' halo requests execute as ONE fused
+    request/response all_to_all pair with the rounds' per-pair slot
+    budgets pooled — total coverage per owner pair never decreases vs N
+    separate fetches (allocation across rounds is priority-ordered, so
+    size the per-round budget for one round's worst case).  ``rounds=1``
+    is bit-identical to the unbatched fetch.
 """
 from __future__ import annotations
 
@@ -46,6 +70,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.cache import hec as hec_lib
+from repro.cache import hot_tier as hot_lib
 from repro.comm.plan import ExchangePlan, build_exchange_plan
 from repro.core import aep
 
@@ -60,19 +85,22 @@ class HaloExchangeEngine:
 
     def __init__(self, num_ranks: int, num_layers: int = 1,
                  push_limit: int = 1, delay: int = 1, axis: str = "data",
-                 plan: Optional[ExchangePlan] = None):
+                 plan: Optional[ExchangePlan] = None, hot_budget: int = 0):
         self.num_ranks = num_ranks
         self.num_layers = num_layers
         self.push_limit = push_limit     # nc: slots per rank pair
         self.delay = delay               # d: steps between push and consume
         self.axis = axis
         self.plan = plan
+        self.hot_budget = hot_budget     # hot rows broadcast per rank per step
 
     @classmethod
     def from_partition(cls, ps, num_layers: int = 1, push_limit: int = 1,
-                       delay: int = 1, axis: str = "data"):
+                       delay: int = 1, axis: str = "data", hot_size: int = 0,
+                       hot_budget: int = 0):
         return cls(ps.num_parts, num_layers, push_limit, delay, axis,
-                   plan=build_exchange_plan(ps))
+                   plan=build_exchange_plan(ps, hot_size=hot_size),
+                   hot_budget=hot_budget)
 
     # -- plan plumbing --------------------------------------------------------
     def device_tables(self) -> dict:
@@ -80,10 +108,22 @@ class HaloExchangeEngine:
         return self.plan.device_tables()
 
     def inflight_init(self, dim_max: int) -> dict:
-        """Stacked ``[R, d, R, L, nc(, dmax)]`` in-flight push queue."""
-        return jax.vmap(lambda _: aep.queue_init(
-            self.delay, self.num_ranks, self.num_layers, self.push_limit,
-            dim_max))(jnp.arange(self.num_ranks))
+        """Stacked ``[R, d, R, L, nc(, dmax)]`` in-flight push queue; with a
+        hot budget the queue grows matching ``hot_*`` buffers for the
+        broadcast segment (slot ids instead of vid tags)."""
+        def one(_):
+            q = aep.queue_init(self.delay, self.num_ranks, self.num_layers,
+                               self.push_limit, dim_max)
+            if self.hot_budget:
+                hb = self.hot_budget
+                q["hot_tags"] = jnp.full(
+                    (self.delay, self.num_ranks, self.num_layers, hb), -1,
+                    jnp.int32)
+                q["hot_embs"] = jnp.zeros(
+                    (self.delay, self.num_ranks, self.num_layers, hb,
+                     dim_max), jnp.float32)
+            return q
+        return jax.vmap(one)(jnp.arange(self.num_ranks))
 
     # -- AEP push (device, inside shard_map) -----------------------------------
     def select_push(self, data: dict, mb: dict, captured: dict,
@@ -125,21 +165,79 @@ class HaloExchangeEngine:
             tags = tags.at[:, l].set(jnp.where(ok, base_tags, -1))
         return tags, embs
 
-    def push(self, tags, embs) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    def select_hot_push(self, data, mb, captured, vid_o_nodes, num_solid,
+                        seed, dims, dmax: int, me):
+        """Reservoir-select up to ``hot_budget`` of this rank's *owned* hot
+        vertices present in the minibatch; every rank will receive the same
+        rows (broadcast refresh).  Tags are dense tier SLOT indices, not
+        vids — the receiver scatters them straight into its replica."""
+        L = self.num_layers
+        hb = self.hot_budget
+        nodes0 = mb["layer_nodes"][0]
+        mask0 = mb["node_mask"][0]
+        vid0 = vid_o_nodes[0]
+        is_solid = (nodes0 < num_solid) & (nodes0 >= 0) & mask0
+        slot, is_hot = hot_lib.tier_slots(data["hot_vids"], vid0)
+        mine = data["hot_mine"][slot] & is_hot & is_solid
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.PRNGKey(11), seed), me)
+        u = jax.random.uniform(key, nodes0.shape, minval=1e-6, maxval=1.0)
+        score = jnp.where(mine, u, -1.0)
+        topv, topi = jax.lax.top_k(score, hb)
+        ok0 = topv > 0
+        base_tags = jnp.where(ok0, slot[topi], -1)
+        pos = jnp.where(ok0, topi, 0)
+
+        tags = jnp.zeros((L, hb), jnp.int32)
+        embs = jnp.zeros((L, hb, dmax), jnp.float32)
+        for l in range(L):
+            h_l, valid_l = captured[l]
+            n_l = h_l.shape[0]
+            p_cl = jnp.clip(pos, 0, n_l - 1)
+            ok = (base_tags >= 0) & (pos < n_l) & valid_l[p_cl]
+            e = jnp.where(ok[:, None], h_l[p_cl].astype(jnp.float32), 0.0)
+            embs = embs.at[l, :, :dims[l]].set(e)
+            tags = tags.at[l].set(jnp.where(ok, base_tags, -1))
+        return tags, embs
+
+    def push(self, tags, embs, hot=None):
         """ONE fused all_to_all: int32 tags ride bitcast in a flat prefix
         of the payload (pure data movement — bits survive the collective).
         The pack is two contiguous block copies per rank row, not an
-        interleaved per-slot lane, so fusing costs no strided traffic."""
+        interleaved per-slot lane, so fusing costs no strided traffic.
+
+        ``hot=(hot_tags [L, hb], hot_embs [L, hb, dmax])`` appends the
+        hot-tier broadcast segment — identical bytes to every destination
+        row, so the refresh rides the SAME collective.  Returns
+        ``(rec_tags, rec_embs)`` or, with ``hot``, additionally
+        ``(rec_hot_tags [R, L, hb], rec_hot_embs [R, L, hb, dmax])``."""
         R, L, nc = tags.shape
         dmax = embs.shape[-1]
         tag_block = jax.lax.bitcast_convert_type(
             tags, jnp.float32).reshape(R, L * nc)
-        buf = jnp.concatenate(
-            [tag_block, embs.reshape(R, L * nc * dmax)], axis=-1)
+        blocks = [tag_block, embs.reshape(R, L * nc * dmax)]
+        if hot is not None:
+            hot_tags, hot_embs = hot
+            hb = hot_tags.shape[-1]
+            ht = jax.lax.bitcast_convert_type(
+                hot_tags, jnp.float32).reshape(1, L * hb)
+            blocks.append(jnp.broadcast_to(ht, (R, L * hb)))
+            blocks.append(jnp.broadcast_to(
+                hot_embs.reshape(1, L * hb * dmax), (R, L * hb * dmax)))
+        buf = jnp.concatenate(blocks, axis=-1)
         rec = jax.lax.all_to_all(buf, self.axis, 0, 0)
+        o = L * nc
         rec_tags = jax.lax.bitcast_convert_type(
-            rec[:, :L * nc], jnp.int32).reshape(R, L, nc)
-        return rec_tags, rec[:, L * nc:].reshape(R, L, nc, dmax)
+            rec[:, :o], jnp.int32).reshape(R, L, nc)
+        rec_embs = rec[:, o:o + L * nc * dmax].reshape(R, L, nc, dmax)
+        if hot is None:
+            return rec_tags, rec_embs
+        o += L * nc * dmax
+        hb = hot[0].shape[-1]
+        rec_hot_tags = jax.lax.bitcast_convert_type(
+            rec[:, o:o + L * hb], jnp.int32).reshape(R, L, hb)
+        rec_hot_embs = rec[:, o + L * hb:].reshape(R, L, hb, dmax)
+        return rec_tags, rec_embs, rec_hot_tags, rec_hot_embs
 
     def aep_push(self, data, mb, captured, vid_o_nodes, num_solid, inflight,
                  seed, dims, dmax, me):
@@ -147,28 +245,62 @@ class HaloExchangeEngine:
 
         ``stats['push_rows']`` / ``stats['push_bytes']`` measure the
         payload this step dispatched behind the backward pass (the
-        overlap metrics surfaced by the trainer/examples)."""
+        overlap metrics surfaced by the trainer/examples); with a hot
+        budget, ``stats['hot_push_rows']`` counts the broadcast-segment
+        rows riding the same collective."""
         tags, embs = self.select_push(data, mb, captured, vid_o_nodes,
                                       num_solid, seed, dims, dmax, me)
-        rec_tags, rec_embs = self.push(tags, embs)
         rows = (tags >= 0).sum()
         nbytes = jnp.zeros((), jnp.float32)
         for l in range(self.num_layers):
             nbytes += (tags[:, l] >= 0).sum().astype(jnp.float32) \
                 * (4.0 + 4.0 * dims[l])
         stats = {"push_rows": rows, "push_bytes": nbytes}
+        if self.hot_budget and "hot_tags" in inflight:
+            h_tags, h_embs = self.select_hot_push(
+                data, mb, captured, vid_o_nodes, num_solid, seed, dims,
+                dmax, me)
+            rec_tags, rec_embs, rec_ht, rec_he = self.push(
+                tags, embs, hot=(h_tags, h_embs))
+            hot_rows = (h_tags >= 0).sum() * (self.num_ranks - 1)
+            for l in range(self.num_layers):
+                stats["push_bytes"] += \
+                    (h_tags[l] >= 0).sum().astype(jnp.float32) \
+                    * (self.num_ranks - 1) * (4.0 + 4.0 * dims[l])
+            stats["hot_push_rows"] = hot_rows
+            out = aep.queue_pop_push(inflight, rec_tags, rec_embs)
+            out["hot_tags"] = jnp.concatenate(
+                [inflight["hot_tags"][1:], rec_ht[None]], 0)
+            out["hot_embs"] = jnp.concatenate(
+                [inflight["hot_embs"][1:], rec_he[None]], 0)
+            return out, stats
+        rec_tags, rec_embs = self.push(tags, embs)
         return aep.queue_pop_push(inflight, rec_tags, rec_embs), stats
 
     def consume_push(self, hec: List, inflight: dict, dims,
-                     life_span: int) -> List:
+                     life_span: int, hot: Optional[List] = None):
         """Tick every layer's HEC, then store the delay-expired push slot
-        (paper lines 8-9)."""
+        (paper lines 8-9).  With a hot tier, tick + scatter the broadcast
+        segment into the replica the same way — ``tier_lookup`` then
+        rejects slots older than the life-span, and a stale hub halo is
+        dropped from aggregation exactly like an HEC miss (hot vids left
+        the pairwise contract, so the HEC holds no copy): the same
+        bounded-degradation semantics, same staleness bound."""
         hec = [hec_lib.hec_tick(h, life_span) for h in hec]
         for l in range(self.num_layers):
             tl = inflight["tags"][0, :, l].reshape(-1)
             el = inflight["embs"][0, :, l, :, :dims[l]].reshape(-1, dims[l])
             hec[l] = hec_lib.hec_store(hec[l], tl, el)
-        return hec
+        if hot is None:
+            return hec
+        out_hot = []
+        for l in range(self.num_layers):
+            t = hot_lib.tier_tick(hot[l])
+            sl = inflight["hot_tags"][0, :, l].reshape(-1)
+            el = inflight["hot_embs"][0, :, l, :, :dims[l]].reshape(
+                -1, dims[l])
+            out_hot.append(hot_lib.tier_store(t, sl, el))
+        return hec, out_hot
 
     # -- sync baseline fetch (device, inside shard_map) -------------------------
     def sync_fetch(self, data, vid0, is_halo0, h0):
@@ -206,33 +338,46 @@ class HaloExchangeEngine:
 
     # -- serve-side cache fetch (device, inside shard_map) ----------------------
     def cache_fetch(self, state, vids_o, owner, need, h,
-                    slots: Optional[int] = None):
+                    slots: Optional[int] = None, rounds: int = 1):
         """One all_to_all request/response pair answering the ``need`` rows
         from the owners' layer-k caches.  Returns the substituted ``h``,
-        the rows answered, and how many rows actually traveled."""
+        the rows answered, and how many rows actually traveled.
+
+        ``rounds=N`` fuses N queued serve rounds into this ONE collective
+        pair: the request buffer grows to ``[R, N * slots]`` — the N
+        rounds' per-pair budgets POOL, so the TOTAL rows answered per
+        owner pair never decreases
+        (``min(total_need, N*slots) >= sum_i min(need_i, slots)``).
+        Allocation across the fused rounds is priority-ordered, not
+        per-round-fair: under overload (total demand toward one owner
+        beyond ``N * slots``) an early hub-heavy round can claim slots a
+        later round would have had unbatched, shifting WHICH rows drop —
+        size ``slots`` (``DistServeConfig.halo_slots``) for one round's
+        worst case so the pooled budget covers the batch.  ``rounds=1``
+        is bit-identical to the unbatched fetch."""
         R = self.num_ranks
         N = vids_o.shape[0]
         d = h.shape[1]
-        slots = min(slots or self.push_limit, N)
+        nslots = min((slots or self.push_limit) * rounds, N)
         prio = jnp.arange(N, 0, -1).astype(jnp.float32)
         req_rows, pos_rows = [], []
         for j in range(R):
             score = jnp.where(need & (owner == j), prio, -1.0)
-            topv, topi = jax.lax.top_k(score, slots)
+            topv, topi = jax.lax.top_k(score, nslots)
             ok = topv > 0
             req_rows.append(jnp.where(ok, vids_o[topi], -1))
             pos_rows.append(jnp.where(ok, topi, N))  # N -> scatter-drop
-        req = jnp.stack(req_rows).astype(jnp.int32)        # [R, slots]
+        req = jnp.stack(req_rows).astype(jnp.int32)        # [R, nslots]
         pos = jnp.stack(pos_rows)
-        got_req = jax.lax.all_to_all(req, self.axis, 0, 0)  # [R_src, slots]
+        got_req = jax.lax.all_to_all(req, self.axis, 0, 0)  # [R_src, nslots]
         own, vals = hec_lib.hec_lookup(state, got_req.reshape(-1))
-        own = own.reshape(R, slots)
-        vals = vals.reshape(R, slots, d)
+        own = own.reshape(R, nslots)
+        vals = vals.reshape(R, nslots, d)
         resp = jax.lax.all_to_all(
             jnp.concatenate(
                 [vals.astype(jnp.float32),
                  own[..., None].astype(jnp.float32)], -1),
-            self.axis, 0, 0)                                # [R, slots, d+1]
+            self.axis, 0, 0)                               # [R, nslots, d+1]
         r_vals, r_ok = resp[..., :-1], resp[..., -1] > 0.5
         fetched = jnp.zeros((N, d), h.dtype)
         got = jnp.zeros(N, bool)

@@ -12,15 +12,31 @@ from typing import Sequence
 
 @dataclasses.dataclass(frozen=True)
 class HECConfig:
-    """Historical Embedding Cache parameters (paper §3.2 / §4.4)."""
+    """Historical Embedding Cache parameters (paper §3.2 / §4.4), plus the
+    PR 5 replicated hot-vertex tier knobs.
+
+    ``hot_size > 0`` replicates the top-K highest-degree halo'd vertices
+    on every rank (the heavy communication tail): they leave the pairwise
+    push contract and their refreshes — up to ``hot_budget`` owned rows
+    per rank per step — ride the SAME fused AEP all_to_all as a broadcast
+    segment.  Replicas age with the HEC life-span; a stale replica
+    degrades exactly like an HEC miss (dropped from aggregation), so size
+    ``hot_budget * life_span`` to cover the hot vertices owned by the
+    busiest rank (each rank refreshes only hubs it owns; the trainer
+    warns when undersized).  Both 0 (default) disables the tier,
+    bit-compatible with the pre-tier trainer."""
     cache_size: int = 1_000_000     # cs: entries per layer
     ways: int = 8                   # set-associativity (TPU adaptation)
     life_span: int = 2              # ls: purge lines older than this
     push_limit: int = 2000          # nc: max solid embeddings pushed per rank pair
     delay: int = 1                  # d: iterations between push and consume
+    hot_size: int = 0               # K: replicated hot-tier slots (0 = off)
+    hot_budget: int = 0             # hot rows broadcast per rank per step
 
     def __post_init__(self):
         assert self.cache_size % self.ways == 0
+        assert (self.hot_size > 0) == (self.hot_budget > 0), \
+            "hot_size and hot_budget must be enabled together"
 
     @property
     def num_sets(self) -> int:

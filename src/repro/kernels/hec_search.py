@@ -8,7 +8,8 @@ by the grid; the values gather (HECLoad) runs on the (set, way) pairs this
 kernel returns.
 
 Outputs per probe: hit flag and way index (set index is recomputed by the
-caller from the same hash — kept in sync with repro.cache.hec._set_index).
+caller from the same hash — ``set_index`` IS ``repro.cache.hec.set_index``,
+one shared function object).
 This kernel stays the lookup primitive of the unified cache subsystem
 (``repro.cache``); the functional state transitions live there.
 """
@@ -18,17 +19,13 @@ import functools
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-_MIX = np.uint32(0x9E3779B1)
-
-
-def set_index(vids: jnp.ndarray, nsets: int) -> jnp.ndarray:
-    """Must match repro.cache.hec._set_index."""
-    h = (vids.astype(jnp.uint32) * _MIX) >> np.uint32(8)
-    return (h % jnp.uint32(nsets)).astype(jnp.int32)
+# THE set-index hash is defined once, in repro.cache.hec; this module
+# re-exports the same function object so kernel and cache can never drift
+# (parity pinned in tests/test_comm.py).
+from repro.cache.hec import set_index
 
 
 def _search_kernel(sets_ref, vids_ref, tags_ref, hit_ref, way_ref):

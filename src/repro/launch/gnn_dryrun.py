@@ -26,6 +26,11 @@ def main():
                     choices=["graphsage", "gat"])
     ap.add_argument("--vertices", type=int, default=30_000)
     ap.add_argument("--mode", default="aep", choices=["aep", "sync", "drop"])
+    ap.add_argument("--hot-size", type=int, default=0,
+                    help="replicated hot-vertex tier slots (0 disables); "
+                         "refreshes ride the fused AEP push")
+    ap.add_argument("--hot-budget", type=int, default=256,
+                    help="hot rows broadcast per rank per step")
     args = ap.parse_args()
 
     import jax
@@ -49,11 +54,17 @@ def main():
         args.model, batch_size=256, feat_dim=128, num_classes=16,
         fanouts=(5, 10), hidden_size=256,
         hec=HECConfig(cache_size=65_536, ways=8, life_span=2,
-                      push_limit=1024, delay=1))
+                      push_limit=1024, delay=1, hot_size=args.hot_size,
+                      hot_budget=args.hot_budget if args.hot_size else 0))
     dd = build_dist_data(ps, cfg)
     mesh = make_gnn_mesh(R)
     tr = DistTrainer(cfg=cfg, mesh=mesh, num_ranks=R, mode=args.mode)
-    state = tr.init_state(jax.random.key(0))
+    state = tr.init_state(jax.random.key(0), dd)
+    if state["hot"]:
+        K = dd["hot_vids"].shape[1]
+        print(f"hot tier: {K} hub vertices replicated per rank; refresh "
+              f"budget {args.hot_budget}/rank/step rides the fused push "
+              f"(hot vids left the pairwise push contract)")
 
     # minibatch via the async pipeline's sampling plan (vectorized CSR
     # sampler; sampled inline so the timing is exactly one batch and no
@@ -71,7 +82,8 @@ def main():
     step = tr.make_step(donate=False)
     t0 = time.time()
     lowered = step.lower(state["params"], state["opt_state"], state["hec"],
-                         state["inflight"], dd, mb, np.uint32(0))
+                         state["hot"], state["inflight"], dd, mb,
+                         np.uint32(0))
     compiled = lowered.compile()
     print(f"lower+compile at {R} ranks: {time.time()-t0:.1f}s")
     mem = compiled.memory_analysis()

@@ -42,6 +42,12 @@ def main():
     ap.add_argument("--prewarm-frac", type=float, default=None,
                     help="override the policy's default fraction "
                          "(degree: 0.25, query_log: 1.0)")
+    ap.add_argument("--hot-size", type=int, default=2048,
+                    help="replicated hot-vertex tier slots (0 disables)")
+    ap.add_argument("--no-dedup", action="store_true",
+                    help="disable cross-query neighborhood dedup")
+    ap.add_argument("--round-batch", type=int, default=4,
+                    help="serve rounds fused into one step/collective")
     args = ap.parse_args()
 
     os.environ.setdefault(
@@ -70,7 +76,13 @@ def main():
         cfg, params, ps, make_gnn_mesh(R),
         DistServeConfig(num_slots=args.slots, halo_slots=args.halo_slots,
                         cache=ServeCacheConfig(cache_size=args.cache_size,
-                                               ways=8)))
+                                               ways=8),
+                        hot_size=args.hot_size, dedup=not args.no_dedup,
+                        round_batch=args.round_batch))
+    if srv.hot is not None:
+        print(f"hot tier:   {srv.hot.num_slots} hub vertices replicated on "
+              f"every shard; dedup={not args.no_dedup}, "
+              f"round_batch={args.round_batch}")
 
     rng = np.random.default_rng(0)
     n_unique = max(1, int(round(args.queries * (1 - args.overlap))))
@@ -104,7 +116,13 @@ def main():
     print(f"halo:       {m['halo_seen']} rows seen, "
           f"{m['halo_local_hits']} served locally "
           f"(cached-halo frac {m['cached_halo_frac']:.2f}), "
-          f"{m['halo_fetched']} fetched via all_to_all")
+          f"{m['halo_fetched']} fetched via all_to_all "
+          f"({m['halo_requested']} remote-fetch rows traveled)")
+    if srv.hot is not None:
+        print(f"heavy tail: {m['hot_hits']} hub rows from the local "
+              f"replica, {m['hot_fast_path_hits']} tier fast-path "
+              f"answers, {m['dedup_merged']} queries deduped into "
+              f"shared slots")
 
     # repeat pass: overlapping neighborhoods now resident per shard
     srv.cache.reset_counters()

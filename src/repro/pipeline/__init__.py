@@ -10,8 +10,9 @@ Layers:
 """
 from repro.pipeline.prefetcher import SamplingPlan, prefetch
 from repro.pipeline.staging import MinibatchPipeline, device_stage
-from repro.pipeline.vectorized_sampler import (sample_blocks_vectorized,
+from repro.pipeline.vectorized_sampler import (concat_blocks,
+                                               sample_blocks_vectorized,
                                                stack_ranks)
 
 __all__ = ["SamplingPlan", "prefetch", "MinibatchPipeline", "device_stage",
-           "sample_blocks_vectorized", "stack_ranks"]
+           "concat_blocks", "sample_blocks_vectorized", "stack_ranks"]

@@ -35,6 +35,30 @@ exact and bit-match single-rank serving.
 ``update_params`` bumps the model version and drops every cached line on
 every shard at once — no shard can serve a stale answer after a
 checkpoint update.
+
+PR 5 heavy-tail elimination, all three knobs off by default (the disabled
+scheduler is bit-compatible with PR 4):
+
+  * ``hot_size=K`` — the plan's top-K hub vertices get a replicated
+    **hot tier** slot on every shard (``repro.cache.hot_tier``): a halo
+    row whose hub embedding is valid in the local replica never enters
+    the ``cache_fetch`` request, and a query whose *output* slot is valid
+    is answered fast-path on ANY shard's replica.  Cold/invalidated
+    replicas fall back to the normal fetch path (bit-identical answers),
+  * ``dedup=True`` — **cross-query neighborhood dedup**: queries for the
+    same VID_o within a round are compacted to ONE slot (sorted
+    unique-VID grouping at packing time; the sampler's unique-VID
+    compaction already dedups shared subtrees *within* a microbatch),
+    computed once, and the answer is scattered back to every requesting
+    query,
+  * ``round_batch=N`` — **multi-round fused exchange batching**: N rounds
+    are fused into one block-diagonal compiled step
+    (``concat_blocks``, bit-exact vs N separate forwards), so each hidden
+    layer's halo gather becomes ONE all_to_all pair carrying all N
+    rounds' requests with pooled per-pair budgets
+    (``cache_fetch(rounds=N)`` — total coverage per owner pair never
+    decreases vs N separate fetches; keep ``halo_slots`` sized for one
+    round's worst case so no round starves under overload).
 """
 from __future__ import annotations
 
@@ -47,12 +71,15 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.cache import hec as hec_lib
+from repro.cache import hot_tier as hot_lib
+from repro.cache.hot_tier import HotTierCache
 from repro.comm.engine import HaloExchangeEngine
-from repro.comm.plan import _pad_stack
+from repro.comm.plan import _pad_stack, hot_set_tables
 from repro.graph.partition import PartitionSet
 from repro.models.gnn import gat as gat_lib
 from repro.models.gnn import graphsage as sage_lib
-from repro.pipeline.vectorized_sampler import (sample_blocks_vectorized,
+from repro.pipeline.vectorized_sampler import (concat_blocks,
+                                               sample_blocks_vectorized,
                                                stack_ranks)
 from repro.serve.gnn.distributed.router import QueryRouter
 from repro.serve.gnn.distributed.sharded_cache import ShardedServingCache
@@ -70,6 +97,9 @@ class DistServeConfig:
         default_factory=ServeCacheConfig)
     sample_seed: int = 0           # base seed of the per-round RNG
     max_queue_depth: Optional[int] = None  # admission cap across all shards
+    hot_size: int = 0              # K: replicated hot-tier slots (0 = off)
+    dedup: bool = False            # cross-query neighborhood dedup
+    round_batch: int = 1           # rounds fused into one step/collective
 
 
 def build_serve_data(ps: PartitionSet) -> dict:
@@ -124,22 +154,79 @@ class DistGNNServeScheduler(ServeFrontend):
         self.router = QueryRouter(ps)
         self.engine = HaloExchangeEngine(self.num_ranks, cfg.num_layers,
                                          push_limit=self.scfg.halo_slots)
+        # replicated hot tier over the plan's static hot set (hubs that
+        # are halos somewhere); needs the normal cache machinery on.
+        # Only the hot tables are derived — serving never consumes the
+        # push_mask/db_halo side of a full ExchangePlan.
+        self.hot: Optional[HotTierCache] = None
+        if self.scfg.hot_size and self.scfg.cache.enabled:
+            hot_vids, _, _ = hot_set_tables(ps, self.scfg.hot_size)
+            if len(hot_vids):
+                self.hot = HotTierCache(serve_layer_dims(cfg),
+                                        hot_vids, self.num_ranks)
+                self.data["hot_vids"] = jnp.asarray(np.broadcast_to(
+                    hot_vids, (self.num_ranks, len(hot_vids))))
+                self._hot_vid_p = self._hot_local_positions(hot_vids)
         self._init_frontend()
         self._step = self._build_step()
         self._lookup = jax.jit(jax.vmap(
             lambda state, vids: hec_lib.hec_lookup(state, vids)))
+        if self.hot is not None:
+            hv = jnp.asarray(self.hot.hot_vids, jnp.int32)
+            self._tier_lookup = jax.jit(jax.vmap(
+                lambda state, vids: hot_lib.tier_lookup(state, hv, vids)))
+
+    def _hot_local_positions(self, hot_vids: np.ndarray) -> List[np.ndarray]:
+        """Per shard, the VID_p of each hot vertex (solid or halo) or -1
+        when the vertex does not appear in that shard's partition — used
+        to turn tier-valid hubs into sampling leaves."""
+        out = []
+        owner, local = self.ps.route(hot_vids)
+        for r, p in enumerate(self.ps.parts):
+            arr = np.full(len(hot_vids), -1, np.int64)
+            mine = owner == r
+            arr[mine] = local[mine]
+            if p.num_halo:
+                pos = np.clip(np.searchsorted(p.halo_vids, hot_vids), 0,
+                              p.num_halo - 1)
+                halo = (p.halo_vids[pos] == hot_vids) & ~mine
+                arr[halo] = p.num_solid + pos[halo]
+            out.append(arr)
+        return out
+
+    def _expandable(self, rank: int):
+        """The shard's cache-residency leaf masks, additionally marking
+        tier-valid hub vertices as leaves (their layer-k embedding will be
+        substituted from the local replica — the widest rows in the graph
+        stop being sampled at all)."""
+        masks = self.cache.expandable_masks(rank)
+        if self.hot is None:
+            return masks
+        hot_p = self._hot_vid_p[rank]
+        for k in range(1, len(masks)):
+            if masks[k] is None:
+                continue
+            sel = hot_p[(hot_p >= 0) & self.hot.valid[k - 1][rank]]
+            if len(sel):
+                masks[k] = masks[k].copy()
+                masks[k][sel] = False
+        return masks
 
     # -- compiled shard_map serve step --------------------------------------
     def _build_step(self):
         cfg = self.cfg
         L = cfg.num_layers
         engine = self.engine
+        rounds = self.scfg.round_batch
+        with_hot = self.hot is not None
+        hot_layers = L if with_hot else 0
         fwd = sage_lib.forward if cfg.model == "graphsage" else gat_lib.forward
 
-        def stepf(params, states, data, mb):
+        def stepf(params, states, tstates, data, mb):
             sq = lambda t: jax.tree_util.tree_map(lambda a: a[0], t)
             data, mb = sq(data), sq(mb)
             states = [sq(s) for s in states]
+            tstates = [sq(s) for s in tstates]
             num_solid = data["num_solid"]
             Pmax = data["vid_o"].shape[0]
             lut = lambda tab, n: jnp.where(
@@ -163,9 +250,19 @@ class DistGNNServeScheduler(ServeFrontend):
             valid0 = mask0
 
             captured = {}
-            hits, lookups = [], []
+            hits, lookups, hot_hits = [], [], []
             halo_seen, halo_local = [], []
             halo_fetched, halo_requested = [], []
+
+            def tier_sub(k, h, maskk, already):
+                """Local-replica substitution for hub rows the HEC
+                missed; a hot row answered here never enters the fetch."""
+                if not with_hot:
+                    return h, jnp.zeros_like(maskk)
+                t_hit, t_emb = hot_lib.tier_lookup(
+                    tstates[k - 1], data["hot_vids"], vid_o_nodes[k])
+                use = t_hit & maskk & ~already
+                return jnp.where(use[:, None], t_emb, h), use
 
             def hook(k, h, valid):
                 if k == 0:
@@ -177,20 +274,25 @@ class DistGNNServeScheduler(ServeFrontend):
                 hit, emb = hec_lib.hec_lookup(states[k - 1], vids)
                 hit = hit & maskk
                 h = jnp.where(hit[:, None], emb, h)
+                # then the hot tier: hub rows read the local replica
+                h, hot_hit = tier_sub(k, h, maskk, hit)
                 # remaining halo rows travel: the engine's request/response
                 # all_to_all pair, answered from the owners' layer-k caches
+                # — ONE fused pair for all `rounds` fused segments
                 # (layer-0 halo features come from the static per-shard
                 # mirror and never travel)
-                need = is_halo & ~hit
+                need = is_halo & ~hit & ~hot_hit
                 h, got, nreq = engine.cache_fetch(states[k - 1], vids,
-                                                  owner_nodes[k], need, h)
+                                                  owner_nodes[k], need, h,
+                                                  rounds=rounds)
                 # a halo is valid only if substituted (its local partial
                 # compute never aggregated its remote neighborhood)
-                valid = ((valid & ~is_halo) | hit | got) & maskk
+                valid = ((valid & ~is_halo) | hit | hot_hit | got) & maskk
                 hits.append(hit.sum())
                 lookups.append(maskk.sum())
+                hot_hits.append((is_halo & hot_hit).sum())
                 halo_seen.append(is_halo.sum())
-                halo_local.append((is_halo & hit).sum())
+                halo_local.append((is_halo & (hit | hot_hit)).sum())
                 halo_fetched.append(got.sum())
                 halo_requested.append(nreq)
                 captured[k] = (h, valid)
@@ -204,21 +306,35 @@ class DistGNNServeScheduler(ServeFrontend):
             hitL, embL = hec_lib.hec_lookup(states[L - 1], vid_o_nodes[L])
             hitL = hitL & mb["seed_mask"]
             out = jnp.where(hitL[:, None], embL, out)
-            out_valid = (valid[:B] | hitL) & mb["seed_mask"]
+            out, hotL = tier_sub(L, out, mb["seed_mask"], hitL)
+            out_valid = (valid[:B] | hitL | hotL) & mb["seed_mask"]
             hits.append(hitL.sum())
             lookups.append(mb["seed_mask"].sum())
 
             # store-back: freshly computed/fetched layer-k embeddings enter
-            # THIS shard's cache keyed by VID_o (fetched halos included)
+            # THIS shard's cache keyed by VID_o (fetched halos included);
+            # hot rows additionally refresh the local tier replica
             new_states = list(states)
+            new_t = list(tstates)
+
+            def tier_put(k, vids_k, h_k, valid_k):
+                if not with_hot:
+                    return
+                slot, is_hot = hot_lib.tier_slots(data["hot_vids"], vids_k)
+                new_t[k - 1] = hot_lib.tier_store(
+                    new_t[k - 1], jnp.where(valid_k & is_hot, slot, -1),
+                    h_k)
+
             for k in range(1, L):
                 h_k, valid_k = captured[k]
                 vids_k = jnp.where(valid_k, vid_o_nodes[k], -1)
                 new_states[k - 1] = hec_lib.hec_store(
                     new_states[k - 1], vids_k, h_k)
+                tier_put(k, vid_o_nodes[k], h_k, valid_k)
             vids_L = jnp.where(out_valid, vid_o_nodes[L], -1)
             new_states[L - 1] = hec_lib.hec_store(new_states[L - 1],
                                                   vids_L, out)
+            tier_put(L, vid_o_nodes[L], out, out_valid)
             zl = lambda xs: jnp.stack(xs) if xs else jnp.zeros(0, jnp.int32)
             stats = {
                 "hits": jnp.stack(hits),
@@ -228,16 +344,18 @@ class DistGNNServeScheduler(ServeFrontend):
                 "halo_local": zl(halo_local),
                 "halo_fetched": zl(halo_fetched),
                 "halo_requested": zl(halo_requested),
+                "hot_hits": zl(hot_hits),
             }
             exp = lambda t: jax.tree_util.tree_map(lambda a: a[None], t)
             return (exp(out), exp(out_valid), [exp(s) for s in new_states],
-                    exp(stats))
+                    [exp(s) for s in new_t], exp(stats))
 
         shard, repl = P("data"), P()
         smapped = compat.shard_map(
             stepf, mesh=self.mesh,
-            in_specs=(repl, [shard] * L, shard, shard),
-            out_specs=(shard, shard, [shard] * L, shard))
+            in_specs=(repl, [shard] * L, [shard] * hot_layers, shard, shard),
+            out_specs=(shard, shard, [shard] * L, [shard] * hot_layers,
+                       shard))
         return jax.jit(smapped)
 
     # -- public API ----------------------------------------------------------
@@ -247,32 +365,55 @@ class DistGNNServeScheduler(ServeFrontend):
         return req
 
     def pump(self) -> int:
-        """Serve everything queued; returns shard_map rounds executed."""
+        """Serve everything queued; returns shard_map rounds executed
+        (each round covers ``round_batch`` fused segments)."""
         R = self.num_ranks
-        slots = self.scfg.num_slots
+        cap = self.scfg.num_slots * self.scfg.round_batch
         ran = 0
+        # pending compute work is held as GROUPS (local_vid, [requests]):
+        # with dedup on, queries for the same vertex share one group — one
+        # compute slot answers them all (scatter-back at finish time)
         pending: List[List] = [[] for _ in range(R)]
+        index: List[dict] = [dict() for _ in range(R)]
         while len(self.router) or any(pending):
             # fill FULL per-rank microbatches with cache misses: output-cache
             # hits are answered by the stacked fast-path lookup and never
             # occupy a compute slot
             fast: List[List] = [[] for _ in range(R)]
             for r in range(R):
-                while self.router.queues[r] and len(pending[r]) < slots:
-                    wave = self.router.drain(r, slots - len(pending[r]))
+                while self.router.queues[r] and len(pending[r]) < cap:
+                    wave = self.router.drain(r, cap - len(pending[r]))
                     if self.scfg.cache.enabled:
                         hits, misses = self._split_fast_path(r, wave)
                         fast[r].extend(hits)
-                        pending[r].extend(misses)
                     else:
-                        pending[r].extend(wave)
+                        misses = wave
+                    self._absorb(pending[r], index[r], misses)
             for r, misses in enumerate(self._answer_fast_path(fast)):
-                pending[r].extend(misses)   # defensive: mirror out of sync
+                self._absorb(pending[r], index[r], misses)  # mirror stale
             if any(pending):
-                self._run_round([p[:slots] for p in pending])
-                pending = [p[slots:] for p in pending]
+                take = [p[:cap] for p in pending]
+                self._run_round(take)
+                for r in range(R):
+                    for local, _ in take[r]:
+                        index[r].pop(local, None)
+                    pending[r] = pending[r][cap:]
                 ran += 1
         return ran
+
+    def _absorb(self, groups: List, index: dict, entries):
+        """Fold routed (request, local_vid) entries into pending groups;
+        with dedup on, a repeat vid joins the existing group instead of
+        taking a fresh compute slot."""
+        for req, local in entries:
+            if self.scfg.dedup and local in index:
+                index[local][1].append(req)
+                self.dedup_merged += 1
+            else:
+                g = (local, [req])
+                groups.append(g)
+                if self.scfg.dedup:
+                    index[local] = g
 
     def serve(self, vids: Sequence[int]) -> np.ndarray:
         """Convenience: submit ``vids``, pump, return outputs in order."""
@@ -281,29 +422,40 @@ class DistGNNServeScheduler(ServeFrontend):
         return np.stack([r.result for r in reqs])
 
     def update_params(self, params) -> int:
-        """Install a new checkpoint; every shard drops its cache at once."""
+        """Install a new checkpoint; every shard drops its cache — and
+        every hot-tier replica — at once."""
         self.params = params
+        if self.hot is not None:
+            self.hot.on_model_update()
         return self.cache.on_model_update()
 
     def metrics(self) -> dict:
         out = self.cache.metrics()
         out.update(self._frontend_metrics(len(self.router)))
+        out["round_batch"] = self.scfg.round_batch
+        if self.hot is not None:
+            out.update(self.hot.metrics())
         return out
 
     # -- internals -----------------------------------------------------------
     def _split_fast_path(self, rank: int, wave):
-        """Split a wave into (output-cache-resident, needs-compute)."""
+        """Split a wave into (answerable-without-compute, needs-compute):
+        output-cache-resident on the owner, or hot-tier-valid in the
+        owner's replica."""
         hits, misses = [], []
         for entry in wave:
-            (hits if self.cache.output_resident(rank, entry[0].vid)
-             else misses).append(entry)
+            vid = entry[0].vid
+            ok = self.cache.output_resident(rank, vid) or (
+                self.hot is not None
+                and self.hot.output_resident(rank, vid))
+            (hits if ok else misses).append(entry)
         return hits, misses
 
     def _answer_fast_path(self, fast: List[List]) -> List[List]:
-        """Stacked ``[R, slots]`` lookups answer every output-cache-resident
-        query without sampling or compute; returns per-rank entries the
-        device unexpectedly missed (sent to the compute path, never
-        re-queued — no fast-path livelock)."""
+        """Stacked ``[R, slots]`` lookups answer every output-cache- or
+        tier-resident query without sampling or compute; returns per-rank
+        entries the device unexpectedly missed (sent to the compute path,
+        never re-queued — no fast-path livelock)."""
         misses: List[List] = [[] for _ in range(self.num_ranks)]
         if not any(fast):
             return misses
@@ -317,32 +469,51 @@ class DistGNNServeScheduler(ServeFrontend):
             hit, emb = self._lookup(self.cache.states[L - 1],
                                     jnp.asarray(vids))
             hit, emb = np.asarray(hit), np.asarray(emb)
+            t_hit = np.zeros_like(hit)
+            if self.hot is not None:
+                t_hit, t_emb = self._tier_lookup(self.hot.states[L - 1],
+                                                 jnp.asarray(vids))
+                t_hit, t_emb = np.asarray(t_hit), np.asarray(t_emb)
             for r, lst in enumerate(chunk):
                 for i, entry in enumerate(lst):
                     if hit[r, i]:       # guaranteed by the residency mirror
                         self._finish(entry[0], emb[r, i], "output_cache")
                         self.cache.fast_path_hits += 1
+                    elif t_hit[r, i]:   # hub answered from the local replica
+                        self._finish(entry[0], t_emb[r, i], "hot_tier")
+                        self.hot.fast_path_hits += 1
                     else:
                         misses[r].append(entry)
         return misses
 
-    def _run_round(self, round_reqs: List[List]):
-        """Sample every shard's microbatch, run one shard_map serve step."""
+    def _run_round(self, round_groups: List[List]):
+        """Sample every shard's ``round_batch`` fused segments, run ONE
+        shard_map serve step, scatter each slot's answer back to every
+        request in its group."""
         cfg = self.cfg
+        NB = self.scfg.round_batch
+        slots = self.scfg.num_slots
         blocks = []
         for r in range(self.num_ranks):
-            rng = np.random.default_rng(
-                [self.scfg.sample_seed, self._mb_counter, r])
-            blocks.append(sample_blocks_vectorized(
-                self.ps.parts[r], QueryRouter.seeds_of(round_reqs[r]),
-                cfg.fanouts, rng, self.scfg.num_slots,
-                expandable=self.cache.expandable_masks(r)))
+            expandable = self._expandable(r)
+            segs = []
+            for n in range(NB):
+                grp = round_groups[r][n * slots:(n + 1) * slots]
+                seeds = np.array([local for local, _ in grp], np.int64)
+                rng = np.random.default_rng(
+                    [self.scfg.sample_seed, self._mb_counter, r] +
+                    ([n] if NB > 1 else []))
+                segs.append(sample_blocks_vectorized(
+                    self.ps.parts[r], seeds, cfg.fanouts, rng, slots,
+                    expandable=expandable))
+            blocks.append(concat_blocks(segs))
         self._mb_counter += 1
         mb = jax.tree_util.tree_map(jnp.asarray, stack_ranks(blocks))
         states = self.cache.states if self.scfg.cache.enabled \
             else self.cache.init_states()
-        out, out_valid, new_states, stats = self._step(
-            self.params, states, self.data, mb)
+        tstates = self.hot.states if self.hot is not None else []
+        out, out_valid, new_states, new_t, stats = self._step(
+            self.params, states, tstates, self.data, mb)
         out = np.asarray(out)
         out_valid = np.asarray(out_valid)
         stats = jax.tree_util.tree_map(np.asarray, stats)
@@ -351,9 +522,15 @@ class DistGNNServeScheduler(ServeFrontend):
         if self.scfg.cache.enabled:
             self.cache.states = new_states
             self.cache.sync_host()
+        if self.hot is not None:
+            self.hot.states = new_t
+            self.hot.hot_hits += int(stats["hot_hits"].sum())
+            self.hot.sync_host()
         self.steps_run += 1
-        for r, lst in enumerate(round_reqs):
-            for i, (req, _) in enumerate(lst):
+        for r, groups in enumerate(round_groups):
+            for i, (local, reqs) in enumerate(groups):
                 assert out_valid[r, i], \
-                    f"request {req.rid} (vid {req.vid}) not served"
-                self._finish(req, out[r, i], "compute")
+                    f"requests {[q.rid for q in reqs]} " \
+                    f"(vid {reqs[0].vid}) not served"
+                for req in reqs:
+                    self._finish(req, out[r, i], "compute")

@@ -83,6 +83,10 @@ def prewarm(srv, policy: str = "degree", frac: Optional[float] = None,
         vids = select_prewarm_vids(ps.parts, policy, frac, query_log)
         embs = layerwise_embeddings_dist(srv.cfg, srv.params, ps,
                                          chunk_size=chunk_size)
+        if getattr(srv, "hot", None) is not None:
+            # hot-tier replicas ride the same offline pass: every shard
+            # gets the full hub slice, owner or not
+            srv.hot.warm(embs)
         return srv.cache.warm(embs, vids)
     from repro.serve.gnn.offline import layerwise_embeddings, warm_cache
     vids = select_prewarm_vids([srv.part], policy, frac, query_log)

@@ -35,6 +35,12 @@ Admission control: ``max_queue_depth`` caps the request queue — ``submit``
 raises ``AdmissionRejected`` (the query is rejected with immediate
 backpressure, never silently dropped) and per-request enqueue->answer
 latency is tracked with p50/p99 in ``metrics()``.
+
+Cross-query neighborhood dedup (``dedup=True``, PR 5): queries for the
+same vertex that are pending together are compacted to ONE compute slot
+(the sampler's sorted unique-VID compaction already dedups shared
+subtrees *within* a microbatch); the slot's answer is scattered back to
+every requesting query.  ``dedup_merged`` counts the slots saved.
 """
 from __future__ import annotations
 
@@ -63,6 +69,8 @@ class GNNServeConfig:
         default_factory=ServeCacheConfig)
     sample_seed: int = 0           # base seed of the per-microbatch RNG
     max_queue_depth: Optional[int] = None  # admission cap; None = unbounded
+    dedup: bool = False            # cross-query dedup: same-vid queries in
+    #                                a microbatch share ONE compute slot
 
 
 class AdmissionRejected(RuntimeError):
@@ -135,6 +143,7 @@ class ServeFrontend:
         self.steps_run = 0
         self.queries_served = 0
         self.queries_rejected = 0
+        self.dedup_merged = 0          # queries answered by a shared slot
         self.latency.reset()
 
     def _admit(self, vid: int, queue_depth: int) -> GNNRequest:
@@ -161,6 +170,7 @@ class ServeFrontend:
         out = {"steps_run": self.steps_run,
                "queries_served": self.queries_served,
                "queries_rejected": self.queries_rejected,
+               "dedup_merged": self.dedup_merged,
                "queue_depth": queue_depth}
         out.update(self.latency.metrics())
         return out
@@ -268,7 +278,11 @@ class GNNServeScheduler(ServeFrontend):
     def pump(self) -> int:
         """Serve everything queued; returns microbatches executed."""
         ran = 0
-        pending: List[GNNRequest] = []
+        # pending compute work as GROUPS (vid, [requests]): with dedup on,
+        # repeat queries for one vertex share ONE compute slot and the
+        # answer is scattered back to every request in the group
+        pending: List = []
+        index: dict = {}
         while self.queue or pending:
             # fill a FULL microbatch with cache misses: output-cache hits
             # are answered inline and never occupy a slot, so warm-cache
@@ -277,10 +291,22 @@ class GNNServeScheduler(ServeFrontend):
                 n = min(len(self.queue),
                         self.scfg.num_slots - len(pending))
                 wave = [self.queue.popleft() for _ in range(n)]
-                pending.extend(self._answer_from_output_cache(wave)
-                               if self.scfg.cache.enabled else wave)
+                misses = (self._answer_from_output_cache(wave)
+                          if self.scfg.cache.enabled else wave)
+                for req in misses:
+                    if self.scfg.dedup and req.vid in index:
+                        index[req.vid][1].append(req)
+                        self.dedup_merged += 1
+                    else:
+                        g = (req.vid, [req])
+                        pending.append(g)
+                        if self.scfg.dedup:
+                            index[req.vid] = g
             if pending:
-                self._run_microbatch(pending[:self.scfg.num_slots])
+                take = pending[:self.scfg.num_slots]
+                self._run_microbatch(take)
+                for vid, _ in take:
+                    index.pop(vid, None)
                 pending = pending[self.scfg.num_slots:]
                 ran += 1
         return ran
@@ -323,8 +349,10 @@ class GNNServeScheduler(ServeFrontend):
                     misses.append(r)
         return misses
 
-    def _run_microbatch(self, reqs: List[GNNRequest]):
-        mb = self._sample([r.vid for r in reqs])
+    def _run_microbatch(self, groups: List):
+        """One compiled step over the groups' unique vids; every request
+        in a group receives the same slot's answer (dedup scatter-back)."""
+        mb = self._sample([vid for vid, _ in groups])
         states = self.cache.states
         if not self.scfg.cache.enabled:
             # baseline mode: every microbatch sees an empty cache, so
@@ -340,6 +368,8 @@ class GNNServeScheduler(ServeFrontend):
             self.cache.states = new_states
             self.cache.sync_host()
         self.steps_run += 1
-        for i, r in enumerate(reqs):
-            assert out_valid[i], f"request {r.rid} (vid {r.vid}) not served"
-            self._finish(r, out[i], "compute")
+        for i, (vid, reqs) in enumerate(groups):
+            assert out_valid[i], \
+                f"requests {[q.rid for q in reqs]} (vid {vid}) not served"
+            for req in reqs:
+                self._finish(req, out[i], "compute")

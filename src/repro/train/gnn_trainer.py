@@ -39,6 +39,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.cache import hec as hec_lib
+from repro.cache import hot_tier as hot_lib
 from repro.comm.engine import HaloExchangeEngine
 from repro.comm.plan import _pad_stack, build_exchange_plan
 from repro.configs.gnn import GNNConfig
@@ -57,10 +58,13 @@ from repro.utils import compat
 # ---------------------------------------------------------------------------
 def build_dist_data(ps: PartitionSet, cfg: GNNConfig) -> dict:
     """Stacked per-rank device tables: features/labels/id maps plus the
-    static exchange-plan tables (db_halo, push_mask, sorted owner tables)
-    the ``HaloExchangeEngine`` consumes — all computed once per
-    partitioning, never per step."""
-    plan_tables = build_exchange_plan(ps, host_indices=False).device_tables()
+    static exchange-plan tables (db_halo, push_mask, sorted owner tables,
+    and — when ``cfg.hec.hot_size`` — the hot-set tables) the
+    ``HaloExchangeEngine`` consumes — all computed once per partitioning,
+    never per step."""
+    plan_tables = build_exchange_plan(
+        ps, host_indices=False,
+        hot_size=cfg.hec.hot_size).device_tables()
     feats = _pad_stack([p.features for p in ps.parts], 0.0)
     labels = _pad_stack([p.labels.astype(np.int32) for p in ps.parts], 0)
     num_solid = np.array([p.num_solid for p in ps.parts], np.int32)
@@ -156,7 +160,8 @@ class DistTrainer:
         if self.engine is None:
             self.engine = HaloExchangeEngine(
                 self.num_ranks, self.cfg.num_layers,
-                self.cfg.hec.push_limit, self.cfg.hec.delay)
+                self.cfg.hec.push_limit, self.cfg.hec.delay,
+                hot_budget=self.cfg.hec.hot_budget)
 
     def init_state(self, key, dist_data=None):
         cfg = self.cfg
@@ -169,12 +174,52 @@ class DistTrainer:
                 cfg.hec.cache_size, cfg.hec.ways, dims[l]))(jnp.arange(R))
             for l in range(cfg.num_layers)
         ]
+        # replicated hot-vertex tier: one [R, K, dim] replica stack per
+        # layer, alive only when the plan derived a non-empty hot set (a
+        # partitioning with no halos has no communication tail to cut)
+        hot = []
+        if self.engine.hot_budget and self.mode != "aep":
+            self.engine.hot_budget = 0     # the tier is an AEP mechanism
+        elif self.engine.hot_budget:
+            if dist_data is None:
+                # build_dist_data already stripped hot vids from the
+                # pairwise push contract; silently training without the
+                # tier would leave hub halos served by NEITHER mechanism
+                raise ValueError(
+                    "hec.hot_size/hot_budget are enabled: init_state "
+                    "needs dist_data (build_dist_data(ps, cfg)) so the "
+                    "tier replicas match the plan's hot tables")
+            if "hot_vids" not in dist_data:
+                # the plan found no hot candidates (no halos), so the
+                # push contract was not filtered either: tier off is safe
+                self.engine.hot_budget = 0
+            else:
+                K = dist_data["hot_vids"].shape[1]
+                # each rank refreshes only hubs it OWNS, so the binding
+                # constraint is the busiest owner, not the aggregate
+                owned_max = int(np.asarray(
+                    dist_data["hot_mine"]).sum(axis=1).max())
+                if cfg.hec.hot_budget * cfg.hec.life_span < owned_max:
+                    import warnings
+                    warnings.warn(
+                        f"hot tier refresh budget is undersized: the "
+                        f"busiest rank owns {owned_max} of {K} hot "
+                        f"vertices but can refresh only hot_budget*"
+                        f"life_span = "
+                        f"{cfg.hec.hot_budget * cfg.hec.life_span} per "
+                        f"staleness window; unrefreshed replicas go "
+                        f"stale and those hub halos degrade like HEC "
+                        f"misses (dropped from aggregation)")
+                hot = [jax.vmap(lambda _: hot_lib.tier_init(K, dims[l]))(
+                    jnp.arange(R)) for l in range(cfg.num_layers)]
         inflight = self.engine.inflight_init(max(dims))
         return {"params": params, "opt_state": opt_state, "hec": hec,
-                "inflight": inflight, "step": jnp.zeros((), jnp.int32)}
+                "hot": hot, "inflight": inflight,
+                "step": jnp.zeros((), jnp.int32)}
 
     # -- per-rank step body (inside shard_map) ------------------------------
-    def _rank_step(self, params, opt_state, hec, inflight, data, mb, seed):
+    def _rank_step(self, params, opt_state, hec, hot, inflight, data, mb,
+                   seed):
         cfg = self.cfg
         L = cfg.num_layers
         dims = layer_dims(cfg)
@@ -184,15 +229,21 @@ class DistTrainer:
         sq = lambda t: jax.tree_util.tree_map(lambda a: a[0], t)
         data, mb = sq(data), sq(mb)
         hec = [sq(h) for h in hec]
+        hot = [sq(h) for h in hot]
         inflight = sq(inflight)
 
         num_solid = data["num_solid"]
         P_max = data["vid_o"].shape[0]
 
-        # (1) HEC tick + consume the delayed push (paper lines 8-9)
+        # (1) HEC tick + consume the delayed push (paper lines 8-9); the
+        # hot tier ticks/consumes its broadcast segment the same way
         if self.mode == "aep":
-            hec = self.engine.consume_push(hec, inflight, dims,
-                                           cfg.hec.life_span)
+            if hot:
+                hec, hot = self.engine.consume_push(
+                    hec, inflight, dims, cfg.hec.life_span, hot=hot)
+            else:
+                hec = self.engine.consume_push(hec, inflight, dims,
+                                               cfg.hec.life_span)
 
         # (2) layer-0 inputs
         nodes0 = mb["layer_nodes"][0]
@@ -205,19 +256,34 @@ class DistTrainer:
                                  data["vid_o"][jnp.clip(n, 0, P_max - 1)], -1)
                        for n in mb["layer_nodes"]]
 
+        def tier_sub(k, h, is_halo):
+            """Hot-tier substitution: a halo row whose hub embedding is
+            fresh in the local replica skips the HEC entirely."""
+            if not hot:
+                return h, jnp.zeros_like(is_halo)
+            t_hit, t_emb = hot_lib.tier_lookup(
+                hot[k], data["hot_vids"], vid_o_nodes[k],
+                cfg.hec.life_span)
+            use = is_halo & t_hit
+            h = jnp.where(use[:, None], t_emb[:, :h.shape[1]], h)
+            return h, use
+
+        zero = jnp.zeros((), jnp.int32)
         if self.mode == "aep":
+            h0, use_hot0 = tier_sub(0, h0, is_halo0)
             hit0, emb0 = hec_lib.hec_lookup(hec[0], vid_o_nodes[0])
-            use0 = is_halo0 & hit0
+            use0 = is_halo0 & hit0 & ~use_hot0
             h0 = jnp.where(use0[:, None], emb0, h0)
-            valid0 = valid0 | use0
-            hits0 = (jnp.sum(use0), jnp.sum(is_halo0))
+            valid0 = valid0 | use0 | use_hot0
+            hits0 = (jnp.sum(use0 | use_hot0), jnp.sum(is_halo0),
+                     jnp.sum(use_hot0))
         elif self.mode == "sync":
             h0, got = self.engine.sync_fetch(data, vid_o_nodes[0],
                                              is_halo0, h0)
             valid0 = valid0 | got
-            hits0 = (got.sum(), jnp.sum(is_halo0))
+            hits0 = (got.sum(), jnp.sum(is_halo0), zero)
         else:
-            hits0 = (jnp.zeros((), jnp.int32), jnp.sum(is_halo0))
+            hits0 = (zero, jnp.sum(is_halo0), zero)
 
         def loss_fn(params):
             captured = {}
@@ -231,11 +297,13 @@ class DistTrainer:
                 maskk = mb["node_mask"][k]
                 is_halo = (nodes_k >= num_solid) & maskk
                 if self.mode == "aep" and k < L:
+                    h, use_hot = tier_sub(k, h, is_halo)
                     hit, emb = hec_lib.hec_lookup(hec[k], vid_o_nodes[k])
-                    use = is_halo & hit
+                    use = is_halo & hit & ~use_hot
                     h = jnp.where(use[:, None], emb[:, :h.shape[1]], h)
-                    valid = (valid & ~is_halo) | use
-                    hits.append((jnp.sum(use), jnp.sum(is_halo)))
+                    valid = (valid & ~is_halo) | use | use_hot
+                    hits.append((jnp.sum(use | use_hot), jnp.sum(is_halo),
+                                 jnp.sum(use_hot)))
                 else:
                     valid = valid & ~is_halo
                 if k < L:
@@ -304,16 +372,21 @@ class DistTrainer:
                 push_stats["push_rows"], "data")
             metrics["aep_push_bytes"] = jax.lax.psum(
                 push_stats["push_bytes"], "data")
-        for l, (h_cnt, t_cnt) in enumerate(hits):
+            if "hot_push_rows" in push_stats:
+                metrics["hot_push_rows"] = jax.lax.psum(
+                    push_stats["hot_push_rows"], "data")
+        for l, (h_cnt, t_cnt, hot_cnt) in enumerate(hits):
             metrics[f"hec_hits_l{l}"] = jax.lax.psum(h_cnt, "data")
             metrics[f"hec_halos_l{l}"] = jax.lax.psum(t_cnt, "data")
+            if hot:
+                metrics[f"hot_hits_l{l}"] = jax.lax.psum(hot_cnt, "data")
         for l in range(L):
             metrics[f"hec_occ_l{l}"] = jax.lax.pmean(
                 hec_lib.hec_occupancy(hec[l]), "data")
 
         exp = lambda t: jax.tree_util.tree_map(lambda a: a[None], t)
-        return (params, opt_state, [exp(h) for h in hec], exp(inflight),
-                metrics)
+        return (params, opt_state, [exp(h) for h in hec],
+                [exp(h) for h in hot], exp(inflight), metrics)
 
     # -- public API ----------------------------------------------------------
     def _resolve_pipeline(self, ps, seed0, pipeline):
@@ -329,17 +402,24 @@ class DistTrainer:
         cfg = self.cfg
         shard = P("data")
         repl = P()
+        # the tier adds one sharded state list when enabled (init_state
+        # clears engine.hot_budget when the plan has no hot set, so build
+        # the step after init_state)
+        hot_layers = cfg.num_layers \
+            if (self.mode == "aep" and self.engine.hot_budget) else 0
 
-        def stepf(params, opt_state, hec, inflight, data, mb, seed):
-            return self._rank_step(params, opt_state, hec, inflight, data,
-                                   mb, seed)
+        def stepf(params, opt_state, hec, hot, inflight, data, mb, seed):
+            return self._rank_step(params, opt_state, hec, hot, inflight,
+                                   data, mb, seed)
 
         smapped = compat.shard_map(
             stepf, mesh=self.mesh,
-            in_specs=(repl, repl, [shard] * cfg.num_layers, shard, shard,
-                      shard, repl),
-            out_specs=(repl, repl, [shard] * cfg.num_layers, shard, repl))
-        return jax.jit(smapped, donate_argnums=(1, 2, 3) if donate else ())
+            in_specs=(repl, repl, [shard] * cfg.num_layers,
+                      [shard] * hot_layers, shard, shard, shard, repl),
+            out_specs=(repl, repl, [shard] * cfg.num_layers,
+                       [shard] * hot_layers, shard, repl))
+        return jax.jit(smapped,
+                       donate_argnums=(1, 2, 3, 4) if donate else ())
 
     def train_epochs(self, ps, dist_data, state, num_epochs, seed0=0,
                      step_fn=None, log_every=0, pipeline="auto"):
@@ -371,9 +451,10 @@ class DistTrainer:
             ep_metrics = []
             for mb in mb_iter:
                 (state["params"], state["opt_state"], state["hec"],
-                 state["inflight"], metrics) = step_fn(
+                 state["hot"], state["inflight"], metrics) = step_fn(
                     state["params"], state["opt_state"], state["hec"],
-                    state["inflight"], dist_data, mb, jnp.uint32(step_idx))
+                    state["hot"], state["inflight"], dist_data, mb,
+                    jnp.uint32(step_idx))
                 ep_metrics.append({k_: float(v) for k_, v in metrics.items()})
                 step_idx += 1
             mean = _epoch_mean(ep_metrics)
@@ -412,9 +493,10 @@ class DistTrainer:
             mb_iter = _legacy()
         accs, weights = [], []
         for k, mb in enumerate(mb_iter):
-            (_, _, _, _, metrics) = step_fn(
+            (_, _, _, _, _, metrics) = step_fn(
                 state["params"], state["opt_state"], state["hec"],
-                state["inflight"], dist_data, mb, jnp.uint32(10_000 + k))
+                state["hot"], state["inflight"], dist_data, mb,
+                jnp.uint32(10_000 + k))
             accs.append(float(metrics["acc"]))
             weights.append(float(metrics["examples"]))
         if not sum(weights):

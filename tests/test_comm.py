@@ -29,8 +29,10 @@ import numpy as np
 import pytest
 
 from repro.cache import hec as H
+from repro.cache import hot_tier as T
 from repro.comm.engine import HaloExchangeEngine
-from repro.comm.plan import _SENTINEL, build_exchange_plan
+from repro.comm.plan import (_SENTINEL, build_exchange_plan,
+                             partition_degrees)
 from repro.graph import partition_graph, synthetic_graph
 
 
@@ -161,7 +163,7 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import json
 import jax
 import numpy as np
-from repro.configs.gnn import small_gnn_config
+from repro.configs.gnn import HECConfig, small_gnn_config
 from repro.graph import partition_graph, synthetic_graph
 from repro.launch.mesh import make_gnn_mesh
 from repro.train.gnn_trainer import DistTrainer, build_dist_data
@@ -170,30 +172,39 @@ g = synthetic_graph(num_vertices=1500, avg_degree=8, num_classes=6,
                     feat_dim=24, seed=0)
 ps = partition_graph(g, 4, seed=0)
 mesh = make_gnn_mesh(4)
-cfg = small_gnn_config("graphsage", batch_size=32, feat_dim=24,
-                       num_classes=6)
-dd = build_dist_data(ps, cfg)
-states, hists = {}, {}
-for overlap in [True, False]:
-    tr = DistTrainer(cfg=cfg, mesh=mesh, num_ranks=4, mode="aep",
-                     overlap=overlap)
-    st = tr.init_state(jax.random.key(0))
-    st, hist = tr.train_epochs(ps, dd, st, 2)
-    states[overlap] = st
-    hists[overlap] = [h["loss"] for h in hist]
 
 def bit_equal(a, b):
     return bool(jax.tree_util.tree_all(jax.tree_util.tree_map(
         lambda x, y: bool((np.asarray(x) == np.asarray(y)).all()), a, b)))
 
-out = {
-    "params_equal": bit_equal(states[True]["params"], states[False]["params"]),
-    "hec_equal": bit_equal(states[True]["hec"], states[False]["hec"]),
-    "inflight_equal": bit_equal(states[True]["inflight"],
-                                states[False]["inflight"]),
-    "loss_equal": hists[True] == hists[False],
-    "loss_first": hists[True][0], "loss_last": hists[True][-1],
-}
+out = {}
+for hot in [0, 48]:
+    hec = HECConfig(cache_size=4096, ways=4, life_span=2, push_limit=256,
+                    delay=1, hot_size=hot, hot_budget=32 if hot else 0)
+    cfg = small_gnn_config("graphsage", batch_size=32, feat_dim=24,
+                           num_classes=6, hec=hec)
+    dd = build_dist_data(ps, cfg)
+    states, hists, hot_hits = {}, {}, 0.0
+    for overlap in [True, False]:
+        tr = DistTrainer(cfg=cfg, mesh=mesh, num_ranks=4, mode="aep",
+                         overlap=overlap)
+        st = tr.init_state(jax.random.key(0), dd)
+        st, hist = tr.train_epochs(ps, dd, st, 2)
+        states[overlap] = st
+        hists[overlap] = [h["loss"] for h in hist]
+        hot_hits += sum(sum(h.get(f"hot_hits_l{l}", 0.0)
+                            for l in range(cfg.num_layers)) for h in hist)
+    out["hot" if hot else "base"] = {
+        "params_equal": bit_equal(states[True]["params"],
+                                  states[False]["params"]),
+        "hec_equal": bit_equal(states[True]["hec"], states[False]["hec"]),
+        "hot_equal": bit_equal(states[True]["hot"], states[False]["hot"]),
+        "inflight_equal": bit_equal(states[True]["inflight"],
+                                    states[False]["inflight"]),
+        "loss_equal": hists[True] == hists[False],
+        "loss_first": hists[True][0], "loss_last": hists[True][-1],
+        "hot_hits": hot_hits,
+    }
 print("RESULT" + json.dumps(out))
 """
 
@@ -210,20 +221,32 @@ def overlap_results():
     return json.loads(line[len("RESULT"):])
 
 
-def test_overlap_bitmatches_inline_push(overlap_results):
+@pytest.mark.parametrize("variant", ["base", "hot"])
+def test_overlap_bitmatches_inline_push(overlap_results, variant):
     """The paper's dispatch-then-wait overlap moves identical bits: model
-    params, HEC contents, in-flight queue, and loss history all bit-match
-    the inline-push schedule after a full epoch."""
-    r = overlap_results
+    params, HEC contents, hot-tier replicas, in-flight queue, and loss
+    history all bit-match the inline-push schedule after a full epoch —
+    with AND without the hot-tier broadcast segment riding the fused
+    collective."""
+    r = overlap_results[variant]
     assert r["params_equal"]
     assert r["hec_equal"]
+    assert r["hot_equal"]
     assert r["inflight_equal"]
     assert r["loss_equal"]
 
 
-def test_overlap_training_converges(overlap_results):
-    r = overlap_results
+@pytest.mark.parametrize("variant", ["base", "hot"])
+def test_overlap_training_converges(overlap_results, variant):
+    r = overlap_results[variant]
     assert r["loss_last"] < r["loss_first"]
+
+
+def test_hot_tier_training_serves_hub_halos(overlap_results):
+    """With the tier on, hub halo rows are answered from the local
+    replica (hot hits observed); with it off the counters don't exist."""
+    assert overlap_results["hot"]["hot_hits"] > 0
+    assert overlap_results["base"]["hot_hits"] == 0
 
 
 # ---------------------------------------------------------------------------
@@ -301,3 +324,154 @@ def test_compat_exchange_matches_engine(plan_ps):
     assert nb_a == nb_b
     for a, b in zip(rows_a, rows_b):
         np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# (d) shared set-index hash: kernel and cache can never drift
+# ---------------------------------------------------------------------------
+def test_set_index_shared():
+    """kernels/hec_search.set_index IS repro.cache.hec.set_index (one
+    function object), and both match the documented Fibonacci hash."""
+    from repro.kernels import hec_search
+    assert hec_search.set_index is H.set_index
+    assert H._set_index is H.set_index          # internal alias too
+    vids = np.array([-1, 0, 1, 7, 4096, 2 ** 30, 123456789], np.int32)
+    for nsets in [16, 128, 4096]:
+        got = np.asarray(H.set_index(jnp.asarray(vids), nsets))
+        np.testing.assert_array_equal(got, _ref_set_index(vids, nsets))
+
+
+# ---------------------------------------------------------------------------
+# (e) hot-vertex tier: plan tables, staleness fallback, fused-push segment
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def hot_ps():
+    g = synthetic_graph(num_vertices=900, avg_degree=8, num_classes=4,
+                        feat_dim=8, seed=2, intra_prob=0.35)
+    return partition_graph(g, 4, seed=0)
+
+
+def test_plan_hot_tables_contract(hot_ps):
+    """Hot set = top-K degree among halo'd vertices, sorted by vid; hot
+    vids leave the pairwise push contract, db_halo stays untouched, and
+    hot_size=0 is byte-identical to the pre-tier plan."""
+    ps = hot_ps
+    K = 64
+    plan0 = build_exchange_plan(ps)
+    plan = build_exchange_plan(ps, hot_size=K)
+    assert plan.hot_size == K
+    assert (np.diff(plan.hot_vids) > 0).all()          # sorted, unique
+    deg = partition_degrees(ps)
+    halo_d = np.unique(np.concatenate([p.halo_vids for p in ps.parts]))
+    assert np.isin(plan.hot_vids, halo_d).all()        # halos somewhere
+    # every non-hot candidate has degree <= the lowest hot degree
+    cold = np.setdiff1d(halo_d, plan.hot_vids)
+    assert deg[cold].max() <= deg[plan.hot_vids].min() + 0  # ties by vid
+    np.testing.assert_array_equal(plan.hot_owner,
+                                  ps.owner[plan.hot_vids])
+    reps = sum(int(np.isin(p.halo_vids, plan.hot_vids).sum())
+               for p in ps.parts)
+    assert int(plan.hot_replicas.sum()) == reps
+    # db_halo (the partition contract) is NOT filtered...
+    np.testing.assert_array_equal(plan.db_halo, plan0.db_halo)
+    # ...but push_mask is: exactly the hot rows leave the contract
+    for i in range(ps.num_parts):
+        solid_hot = np.isin(ps.parts[i].solid_vids, plan.hot_vids)
+        for j in range(ps.num_parts):
+            expect = plan0.push_mask[i, j].copy()
+            expect[:ps.parts[i].num_solid] &= ~solid_hot
+            np.testing.assert_array_equal(plan.push_mask[i, j], expect)
+    # hot_size=0 (the default) is byte-identical to the pre-tier plan
+    np.testing.assert_array_equal(plan0.push_mask,
+                                  build_exchange_plan(ps).push_mask)
+    assert plan0.hot_size == 0
+    m = plan.modeled_remote_rows(deg, rounds=16, refresh_every=16)
+    assert m["hot_rows"] < m["baseline_rows"]
+
+
+def test_tier_staleness_fallback():
+    """A replica slot is readable for exactly ``life_span`` ticks after a
+    refresh, then ``tier_lookup`` rejects it — the caller falls back to
+    the normal fetch path (the paper's bounded-staleness semantics)."""
+    hot_vids = jnp.asarray([3, 7, 20], jnp.int32)
+    st = T.tier_init(3, 4)
+    probe = jnp.asarray([3, 7, 20, 5], jnp.int32)
+    hit, _ = T.tier_lookup(st, hot_vids, probe, life_span=2)
+    assert not np.asarray(hit).any()                   # empty: all stale
+    st = T.tier_store(st, jnp.asarray([0, 2], jnp.int32),
+                      jnp.ones((2, 4)) * jnp.asarray([[1.0], [2.0]]))
+    hit, emb = T.tier_lookup(st, hot_vids, probe, life_span=2)
+    np.testing.assert_array_equal(np.asarray(hit),
+                                  [True, False, True, False])
+    np.testing.assert_array_equal(np.asarray(emb[0]), np.full(4, 1.0))
+    np.testing.assert_array_equal(np.asarray(emb[2]), np.full(4, 2.0))
+    for _ in range(2):                                 # ages 1, 2: fresh
+        st = T.tier_tick(st)
+        hit, _ = T.tier_lookup(st, hot_vids, probe, life_span=2)
+        np.testing.assert_array_equal(np.asarray(hit),
+                                      [True, False, True, False])
+    st = T.tier_tick(st)                               # age 3 > ls: stale
+    hit, _ = T.tier_lookup(st, hot_vids, probe, life_span=2)
+    assert not np.asarray(hit).any()
+    # serving semantics (life_span=None): fresh until dropped
+    hit, _ = T.tier_lookup(st, hot_vids, probe)
+    np.testing.assert_array_equal(np.asarray(hit),
+                                  [True, False, True, False])
+
+
+def test_push_hot_segment_roundtrip():
+    """The hot broadcast segment rides the SAME fused all_to_all: pack +
+    unpack are bit-exact for tags, payload, hot slot ids, and hot rows
+    (single-device mesh, where the collective is the identity)."""
+    from jax.sharding import PartitionSpec as P
+    from repro.utils import compat
+    R, L, nc, hb, dmax = 1, 2, 3, 2, 5
+    engine = HaloExchangeEngine(R, L, nc, hot_budget=hb)
+    rng = np.random.default_rng(0)
+    tags = jnp.asarray(rng.integers(-1, 100, (R, R, L, nc)), jnp.int32)
+    embs = jnp.asarray(rng.normal(size=(R, R, L, nc, dmax)), jnp.float32)
+    h_tags = jnp.asarray([[0, -1], [1, 0]], jnp.int32)          # [L, hb]
+    h_embs = jnp.asarray(rng.normal(size=(L, hb, dmax)), jnp.float32)
+
+    mesh = jax.make_mesh((1,), ("data",))
+
+    def run(t, e):
+        rt, re, rht, rhe = engine.push(t[0], e[0],
+                                       hot=(h_tags, h_embs))
+        return rt[None], re[None], rht[None], rhe[None]
+
+    shard = P("data")
+    f = jax.jit(compat.shard_map(run, mesh=mesh,
+                                 in_specs=(shard, shard),
+                                 out_specs=(shard,) * 4))
+    rt, re, rht, rhe = f(tags, embs)
+    np.testing.assert_array_equal(np.asarray(rt), np.asarray(tags))
+    np.testing.assert_array_equal(np.asarray(re), np.asarray(embs))
+    np.testing.assert_array_equal(np.asarray(rht)[0, 0],
+                                  np.asarray(h_tags))
+    np.testing.assert_array_equal(np.asarray(rhe)[0, 0],
+                                  np.asarray(h_embs))
+
+
+def test_consume_push_feeds_tier():
+    """The delay-expired hot segment lands in the replica (slot scatter)
+    while the HEC consumes the pairwise segment, and ticking past the
+    life-span invalidates the replica again."""
+    L, dims = 2, [4, 4]
+    engine = HaloExchangeEngine(num_ranks=2, num_layers=L, push_limit=2,
+                                hot_budget=2)
+    hec = [H.hec_init(16, 2, 4) for _ in range(L)]
+    hot = [T.tier_init(5, 4) for _ in range(L)]
+    inflight = {
+        "tags": jnp.full((1, 2, L, 2), -1, jnp.int32),
+        "embs": jnp.zeros((1, 2, L, 2, 4), jnp.float32),
+        "hot_tags": jnp.asarray(
+            [[[[0, -1], [2, -1]], [[1, -1], [-1, -1]]]], jnp.int32),
+        "hot_embs": jnp.ones((1, 2, L, 2, 4), jnp.float32),
+    }
+    hec, hot = engine.consume_push(hec, inflight, dims, life_span=2,
+                                   hot=hot)
+    age0 = np.asarray(hot[0].age)
+    assert age0[0] == 0 and age0[1] == 0          # slots 0 (src 0), 1 (src 1)
+    assert age0[2] > 2 and age0[3] > 2            # untouched slots stay stale
+    assert np.asarray(hot[1].age)[2] == 0         # layer 1 slot from src 0

@@ -131,6 +131,55 @@ fresh = DistGNNServeScheduler(cfg, params2, ps, mesh, scfg).serve(vids)
 out["invalidate"] = {"version": v, "max_occupancy": float(max(occ)),
                      "bit_match_fresh": bool(np.array_equal(post, fresh)),
                      "changed": bool(not np.allclose(post, pre, atol=1e-3))}
+
+# -- PR 5: hot tier + dedup + round batching --------------------------------
+import dataclasses
+scfg_opt = DistServeConfig(num_slots=8, halo_slots=160, cache=cache(),
+                           hot_size=96, dedup=True, round_batch=2)
+vids_rep = np.concatenate([np.repeat(vids[:40], 2), vids[40:]])
+# adjacent repeats land in the same packing window -> dedup shares slots
+
+b = DistGNNServeScheduler(cfg, params, ps, mesh, scfg)   # features OFF
+b.cache.warm(ed, all_v, layers=range(L - 1))
+out_base = b.serve(vids_rep)
+o = DistGNNServeScheduler(cfg, params, ps, mesh, scfg_opt)
+o.cache.warm(ed, all_v, layers=range(L - 1))
+o.hot.warm(ed)                                 # replicas on every shard
+out_opt = o.serve(vids_rep)
+mo = o.metrics()
+out["hot_opt"] = {
+    "bit_match_base": bool(np.array_equal(out_opt, out_base)),
+    "steps_opt": o.steps_run, "steps_base": b.steps_run,
+    "dedup_merged": mo["dedup_merged"], "hot_hits": mo["hot_hits"],
+    "hot_fast_path": mo["hot_fast_path_hits"],
+    "halo_requested_opt": mo["halo_requested"],
+    "halo_requested_base": b.metrics()["halo_requested"]}
+
+# cold tier (enabled, never warmed/refreshed): every lookup misses, the
+# normal fetch path answers — bit-identical to the tier-disabled scheduler
+c2 = DistGNNServeScheduler(
+    cfg, params, ps, mesh,
+    dataclasses.replace(scfg_opt, dedup=False, round_batch=1))
+c2.cache.warm(ed, all_v, layers=range(L - 1))
+b2 = DistGNNServeScheduler(cfg, params, ps, mesh, scfg)
+b2.cache.warm(ed, all_v, layers=range(L - 1))
+out["hot_cold_fallback"] = {
+    "bit_match": bool(np.array_equal(c2.serve(vids), b2.serve(vids))),
+    "hot_hits": c2.metrics()["hot_hits"]}
+
+# invalidation: update_params drops every replica on every shard at once;
+# the re-warmed (HEC-only, tier left cold) run falls back to the normal
+# fetch path and bit-matches the tier-disabled scheduler on the new params
+o.update_params(params2)
+hot_valid = [float(np.asarray(v).mean()) for v in o.hot.valid]
+ed2 = layerwise_embeddings_dist(cfg, params2, ps, chunk_size=128)
+o.cache.warm(ed2, all_v, layers=range(L - 1))
+out_inv = o.serve(vids)
+b3 = DistGNNServeScheduler(cfg, params2, ps, mesh, scfg)
+b3.cache.warm(ed2, all_v, layers=range(L - 1))
+out["hot_invalidate"] = {
+    "max_valid_after": max(hot_valid),
+    "bit_match_disabled": bool(np.array_equal(out_inv, b3.serve(vids)))}
 print("RESULT" + json.dumps(out))
 """
 
@@ -197,6 +246,37 @@ def test_latency_metrics_populated(results):
     r = results["warmed"]
     assert r["latency_count"] == r["fast_path"]
     assert r["latency_p99_ms"] >= r["latency_p50_ms"] > 0.0
+
+
+def test_hot_tier_dedup_round_batch_bitmatch(results):
+    """Hot tier + dedup + round batching ON bit-matches the features-OFF
+    scheduler on a repeat-heavy query stream, in fewer rounds and fewer
+    traveled rows — the optimizations change the wire, not the answers."""
+    r = results["hot_opt"]
+    assert r["bit_match_base"]
+    assert r["dedup_merged"] > 0                 # repeats shared slots
+    assert r["hot_hits"] > 0                     # replicas served hub rows
+    assert r["steps_opt"] < r["steps_base"]
+    assert r["halo_requested_opt"] < r["halo_requested_base"]
+
+
+def test_cold_tier_falls_back_bit_identical(results):
+    """A tier-enabled scheduler whose replicas were never warmed answers
+    every query through the normal fetch path — bit-identical to the
+    tier-disabled scheduler (no hot hits at all)."""
+    r = results["hot_cold_fallback"]
+    assert r["bit_match"]
+    assert r["hot_hits"] == 0
+
+
+def test_tier_invalidated_on_update_params(results):
+    """``update_params`` drops every replica on every shard at once; the
+    re-warmed run (tier still cold) falls back to the normal fetch path
+    and bit-matches the tier-disabled scheduler under the new params —
+    a stale replica can never serve a post-checkpoint answer."""
+    r = results["hot_invalidate"]
+    assert r["max_valid_after"] == 0.0
+    assert r["bit_match_disabled"]
 
 
 # -- host-only pieces (no multi-device subprocess needed) -------------------

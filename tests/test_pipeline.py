@@ -15,6 +15,7 @@ from repro.graph.sampling import (epoch_minibatches, layer_capacities,
                                   sample_blocks)
 from repro.pipeline import (MinibatchPipeline, SamplingPlan, prefetch,
                             sample_blocks_vectorized, stack_ranks)
+from repro.pipeline.vectorized_sampler import concat_blocks
 
 FANOUTS = (4, 6)
 BATCH = 32
@@ -167,8 +168,8 @@ def test_empty_padded_batch_step_is_finite():
     step_fn = tr.make_step(dd, donate=False)
     plan = SamplingPlan(ps=ps1, cfg=cfg, base_seed=0)
     mb = jax.device_put(plan.sample_host(0, 0, [np.empty(0, np.int64)]))
-    params, _, _, _, metrics = step_fn(
-        state["params"], state["opt_state"], state["hec"],
+    params, _, _, _, _, metrics = step_fn(
+        state["params"], state["opt_state"], state["hec"], state["hot"],
         state["inflight"], dd, mb, np.uint32(0))
     assert float(metrics["examples"]) == 0
     assert float(metrics["loss"]) == 0.0
@@ -218,3 +219,46 @@ def test_train_bit_identical_sync_vs_pipelined():
     assert loss_sync == loss_1w == loss_4w
     assert acc_sync == acc_1w == acc_4w
     assert loss_sync[-1] < loss_sync[0]       # actually learns
+
+
+def test_concat_blocks_fused_forward_bitmatch(part):
+    """Multi-round batching rests on ``concat_blocks``: the fused
+    block-diagonal minibatch preserves the dst-prefix invariant at every
+    layer and the fused forward computes, row for row, exactly what the
+    separate forwards compute (both models)."""
+    import jax
+    import jax.numpy as jnp
+    from repro.models.gnn import gat as gat_lib
+    from repro.models.gnn import graphsage as sage_lib
+    from repro.train.gnn_trainer import init_model_params
+
+    rng = np.random.default_rng(0)
+    B = 8
+    mbs = [sample_blocks_vectorized(
+        part, rng.integers(0, part.num_solid, B if i != 2 else 3),
+        FANOUTS, np.random.default_rng(i), B) for i in range(4)]
+    fused = concat_blocks(mbs)
+    for k in range(fused.num_layers):           # dst-prefix invariant
+        n_dst = len(fused.layer_nodes[k + 1])
+        np.testing.assert_array_equal(fused.layer_nodes[k][:n_dst],
+                                      fused.layer_nodes[k + 1])
+    for model, lib in [("graphsage", sage_lib), ("gat", gat_lib)]:
+        cfg = small_gnn_config(model, batch_size=B, feat_dim=8,
+                               num_classes=4, fanouts=FANOUTS)
+        params = init_model_params(jax.random.key(0), cfg)
+        feats = jnp.asarray(part.features)
+
+        def run(mb):
+            mask0 = jnp.asarray(mb.node_mask[0])
+            h0 = feats[np.clip(mb.layer_nodes[0], 0, part.num_solid - 1)] \
+                * mask0[:, None]
+            blocks = {"nbr_idx": [jnp.asarray(x.astype(np.int32))
+                                  for x in mb.nbr_idx]}
+            out, valid = lib.forward(params, h0, mask0, blocks)
+            return np.asarray(out), np.asarray(valid)
+
+        of, vf = run(fused)
+        for i, m in enumerate(mbs):
+            o, v = run(m)
+            np.testing.assert_array_equal(of[i * B:(i + 1) * B], o)
+            np.testing.assert_array_equal(vf[i * B:(i + 1) * B], v)
