@@ -1,0 +1,97 @@
+"""Observability overhead benchmark + trace artifact.
+
+Times single-rank training epochs with tracing off vs tracing on and
+**gates** the overhead: a tracing-enabled epoch must stay within 10% of
+the tracing-off median (spans are two ``perf_counter`` calls and one
+appended dict per phase — if that ever becomes measurable against an
+epoch, something regressed).  The tracing-on run's Chrome trace is
+written as ``TRACE_obs.json`` next to the ``BENCH_*`` artifacts (CI
+uploads it) and schema-validated, with the trainer's phase spans
+(sample / host_prep / stage / step) required to be present.
+
+Emits the usual CSV rows plus one ``RESULT{...}`` line with the raw
+medians and the span count.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from benchmarks import common
+from benchmarks.common import emit
+
+OVERHEAD_GATE = 1.10        # traced epoch <= 1.10x untraced median
+
+
+def _median(xs):
+    xs = sorted(xs)
+    return xs[len(xs) // 2]
+
+
+def bench_overhead(ps, epochs=5):
+    import jax
+    from repro import obs
+    from repro.configs.gnn import small_gnn_config
+    from repro.train.gnn_trainer import DistTrainer, build_dist_data
+
+    mesh = jax.make_mesh((1,), ("data",))
+    cfg = small_gnn_config("graphsage", batch_size=256, feat_dim=32,
+                           num_classes=16, fanouts=(5, 10), hidden_size=64)
+    dd = build_dist_data(ps, cfg)
+    tr = DistTrainer(cfg=cfg, mesh=mesh, num_ranks=1, mode="aep")
+    step_fn = tr.make_step(dd)
+
+    def run(trace):
+        obs.configure(obs.ObsConfig(trace=trace))
+        state = tr.init_state(jax.random.key(0))
+        # warmup epoch compiles the step outside the timed window
+        state, _ = tr.train_epochs(ps, dd, state, 1, step_fn=step_fn)
+        times = []
+        for _ in range(epochs):
+            t0 = time.perf_counter()
+            state, _ = tr.train_epochs(ps, dd, state, 1, step_fn=step_fn)
+            times.append(time.perf_counter() - t0)
+        return _median(times)
+
+    try:
+        t_off = run(trace=False)
+        t_on = run(trace=True)
+
+        # trace artifact: written from the tracing-on run above, schema-
+        # validated, and required to contain the trainer's phase spans
+        tracer = obs.get().tracer
+        path = tracer.write(common.artifact_path("TRACE_obs.json"))
+        with open(path) as f:
+            trace = json.load(f)
+        n_spans = obs.validate_chrome_trace(trace)
+        names = {ev["name"] for ev in trace["traceEvents"]
+                 if ev.get("ph") == "X"}
+        missing = {"sample", "host_prep", "stage", "step"} - names
+        assert not missing, f"trace missing phase spans: {sorted(missing)}"
+        print(f"artifact: {path}")
+    finally:
+        obs.configure()     # restore the default runtime for later suites
+
+    overhead = t_on / t_off
+    emit("obs_epoch_trace_off", t_off * 1e6, "")
+    emit("obs_epoch_trace_on", t_on * 1e6,
+         f"overhead={overhead:.3f}x;spans={n_spans}")
+    assert overhead <= OVERHEAD_GATE, \
+        f"tracing overhead {overhead:.3f}x exceeds {OVERHEAD_GATE:.2f}x gate"
+    return {"epoch_trace_off_us": t_off * 1e6,
+            "epoch_trace_on_us": t_on * 1e6,
+            "overhead": overhead, "trace_spans": n_spans}
+
+
+def main(smoke=False):
+    from repro.graph import partition_graph, synthetic_graph
+
+    g = synthetic_graph(num_vertices=4000 if smoke else 20_000,
+                        avg_degree=10, num_classes=16, feat_dim=32, seed=0)
+    ps = partition_graph(g, 1, seed=0)
+    out = bench_overhead(ps, epochs=3 if smoke else 5)
+    common.result(out)
+
+
+if __name__ == "__main__":
+    main()

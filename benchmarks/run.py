@@ -12,6 +12,7 @@ Prints ``name,us_per_call,derived`` CSV lines.
   gnn_serve bench_gnn_serve inference serving: cold vs pre-warmed cache
   gnn_serve_dist bench_gnn_serve_dist sharded serving: shard scaling + halo cache
   roofline                   dry-run roofline table (deliverable g)
+  obs    bench_obs          tracing overhead gate (<10%) + TRACE_obs.json
 
 ``--smoke`` runs every registered benchmark at tiny scale (a CI bit-rot
 guard: each suite must still execute end-to-end, numbers are meaningless —
@@ -41,10 +42,11 @@ def main() -> None:
                     default=os.environ.get("BENCH_OUT_DIR", "bench_results"),
                     help="directory for BENCH_<suite>.json artifacts")
     args = ap.parse_args()
+    common.set_out_dir(args.out_dir)
     from benchmarks import (bench_comm, bench_convergence, bench_distdgl,
                             bench_gnn_serve, bench_gnn_serve_dist, bench_hec,
-                            bench_pipeline, bench_scaling, bench_update,
-                            roofline)
+                            bench_obs, bench_pipeline, bench_scaling,
+                            bench_update, roofline)
     suites = {
         "fig2_update": bench_update.main,
         "fig3_fig4_scaling": bench_scaling.main,
@@ -56,6 +58,7 @@ def main() -> None:
         "gnn_serve": bench_gnn_serve.main,
         "gnn_serve_dist": bench_gnn_serve_dist.main,
         "roofline": roofline.main,
+        "obs": bench_obs.main,
     }
     print("name,us_per_call,derived")
     try:

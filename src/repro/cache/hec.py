@@ -40,6 +40,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 _MIX = jnp.uint32(0x9E3779B1)     # Fibonacci hashing multiplier
 
 
@@ -335,15 +337,20 @@ class EmbeddingCache:
     def record(self, hits: np.ndarray, lookups: np.ndarray):
         self.hits += hits.astype(np.int64)
         self.lookups += lookups.astype(np.int64)
+        # mirror into the obs registry (labeled per layer) so serving hit
+        # rates land in the same sink as the trainer's epoch counters
+        for k in range(len(self.hits)):
+            obs.count("serve_cache_hits", int(hits[k]), layer=k + 1)
+            obs.count("serve_cache_lookups", int(lookups[k]), layer=k + 1)
 
     def record_halo(self, stats: dict):
         """Accumulate a shard_map serve step's per-rank halo-gather counters."""
         assert self.stacked, "halo counters are per-shard (stacked only)"
-        self.halo_seen += int(np.sum(stats["halo_seen"]))
-        self.halo_local += int(np.sum(stats["halo_local"]))
-        self.halo_fetched += int(np.sum(stats["halo_fetched"]))
-        self.halo_requested += int(np.sum(stats["halo_requested"]))
-        self.halo_l0 += int(np.sum(stats["halo_l0"]))
+        for name in ("halo_seen", "halo_local", "halo_fetched",
+                     "halo_requested", "halo_l0"):
+            n = int(np.sum(stats[name]))
+            setattr(self, name, getattr(self, name) + n)
+            obs.count(f"serve_{name}", n)
 
     def reset_counters(self):
         """Zero hit/lookup/fast-path/halo counters (cache contents

@@ -39,6 +39,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
+
 _NEVER = np.int32(2 ** 30)      # age of a never-filled slot (always stale)
 
 
@@ -201,6 +203,7 @@ class HotTierCache:
             self.states[k] = jax.vmap(
                 lambda s: tier_store(s, sl, vj))(st)
         self.sync_host()
+        obs.count("hot_warmed_rows", len(take))
         return len(take)
 
     # -- metrics / invalidation ----------------------------------------------

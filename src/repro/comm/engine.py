@@ -69,6 +69,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.cache import hec as hec_lib
 from repro.cache import hot_tier as hot_lib
 from repro.comm.plan import ExchangePlan, build_exchange_plan
@@ -407,13 +408,15 @@ class HaloExchangeEngine:
         dim = h_solid[0].shape[1] if len(h_solid) else 0
         rows_out: List[np.ndarray] = []
         nbytes = 0
-        for j in range(R):
-            rows = np.zeros((int(plan.num_halo[j]), dim), np.float32)
-            for i in range(R):
-                if i == j or not len(plan.send_local[i][j]):
-                    continue
-                payload = h_solid[i][plan.send_local[i][j]]
-                rows[plan.recv_pos[i][j]] = payload
-                nbytes += payload.nbytes + len(plan.send_local[i][j]) * 4
-            rows_out.append(rows)
+        with obs.span("offline_exchange", ranks=R):
+            for j in range(R):
+                rows = np.zeros((int(plan.num_halo[j]), dim), np.float32)
+                for i in range(R):
+                    if i == j or not len(plan.send_local[i][j]):
+                        continue
+                    payload = h_solid[i][plan.send_local[i][j]]
+                    rows[plan.recv_pos[i][j]] = payload
+                    nbytes += payload.nbytes + len(plan.send_local[i][j]) * 4
+                rows_out.append(rows)
+        obs.count("offline_exchange_bytes", nbytes)
         return rows_out, nbytes

@@ -31,15 +31,25 @@ def main():
                          "refreshes ride the fused AEP push")
     ap.add_argument("--hot-budget", type=int, default=256,
                     help="hot rows broadcast per rank per step")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON of the dry-run's "
+                         "phase spans (load in chrome://tracing / Perfetto)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the obs registry as JSONL")
     args = ap.parse_args()
 
     import jax
+    from repro import obs
     from repro.configs.gnn import HECConfig, small_gnn_config
     from repro.graph import partition_graph, synthetic_graph
     from repro.launch.mesh import ICI_BW, HBM_BW, PEAK_FLOPS_BF16, make_gnn_mesh
     from repro.pipeline import MinibatchPipeline
     from repro.train.gnn_trainer import DistTrainer, build_dist_data
     from repro.utils import hlo_cost
+
+    obs.configure(obs.ObsConfig(
+        trace=args.trace_out is not None, trace_path=args.trace_out,
+        metrics_path=args.metrics_out))
 
     R = args.ranks
     g = synthetic_graph(num_vertices=args.vertices, avg_degree=10,
@@ -105,20 +115,60 @@ def main():
     print(f"roofline: compute={terms['compute_s']*1e3:.3f}ms "
           f"memory={terms['memory_s']*1e3:.3f}ms "
           f"collective={terms['collective_s']*1e3:.3f}ms -> {dom} bound")
+    a2a = r["collectives"].get("all-to-all", {"count": 0, "bytes": 0.0})
+    # one StepModel drives BOTH the overlap print and the epoch breakdown,
+    # so the two figures can never disagree
+    model = obs.StepModel.from_roofline(
+        r["flops"], r["bytes_accessed"],
+        a2a["bytes"] if args.mode == "aep" else 0.0,
+        PEAK_FLOPS_BF16, HBM_BW, ICI_BW)
     if args.mode == "aep":
-        a2a = r["collectives"].get("all-to-all", {"count": 0, "bytes": 0.0})
         assert a2a["count"] >= 1, \
             "AEP must lower to the engine's fused all-to-all push"
-        push_s = a2a["bytes"] / ICI_BW
-        work_s = max(terms["compute_s"], terms["memory_s"])  # on-device step
-        hidden = min(push_s, work_s) / max(push_s, 1e-30)
+        hidden = model.overlap_efficiency()
         print(f"AEP fused all_to_all: {a2a['count']:.0f} op(s) "
               f"({a2a['bytes']:.3e} B/device/step) — the engine's push, "
               f"dispatched between forward and backward (overlap mode)")
         print(f"overlap: {a2a['bytes']:.3e} B/step overlapped behind the "
               f"backward pass; modeled push latency hidden "
-              f"{hidden*100:.0f}% (push {push_s*1e6:.3f}us vs on-device "
-              f"step work {work_s*1e6:.3f}us)")
+              f"{hidden*100:.0f}% (push {model.push_s*1e6:.3f}us vs modeled "
+              f"backward {model.bwd_s*1e6:.3f}us of "
+              f"{model.work_s*1e6:.3f}us step work)")
+
+    # execute the compiled step once: the measured wall time is split
+    # fwd / exposed-push / bwd by the roofline model (the step is ONE
+    # fused XLA program — its interior cannot be host-timed), and the
+    # modeled sub-phases are emitted as trace spans on virtual tracks
+    with obs.span("step", step=0):
+        t0 = time.perf_counter()
+        jax.block_until_ready(compiled(
+            state["params"], state["opt_state"], state["hec"], state["hot"],
+            state["inflight"], dd, mb, np.uint32(0)))
+        t_step = time.perf_counter() - t0
+    fwd_s, push_s, bwd_s = model.split_step(t_step)
+    tracer = obs.get().tracer
+    if tracer.enabled:
+        scale = t_step / model.step_s if model.step_s > 0 else 0.0
+        base = t0 - tracer.epoch
+        tracer.add_complete("fwd", base, fwd_s, track="device (modeled)")
+        tracer.add_complete("bwd", base + fwd_s, bwd_s + push_s,
+                            track="device (modeled)")
+        # the push is dispatched after forward and hidden behind backward;
+        # only its `push_s` tail (the exposed part) extends past bwd
+        tracer.add_complete("aep_push", base + fwd_s,
+                            model.push_s * scale, track="comm (modeled)")
+
+    reg = obs.get().registry
+    bd = obs.EpochBreakdown(model)
+    bd.add_epoch(sample=reg.value("phase_seconds", phase="sample"),
+                 host_prep=reg.value("phase_seconds", phase="host_prep"),
+                 stage=reg.value("phase_seconds", phase="stage"),
+                 step=t_step)
+    print("epoch breakdown (1 step; device step split by the roofline "
+          "model):")
+    print(bd.table())
+    for path in obs.flush():
+        print(f"wrote {path}")
 
 
 if __name__ == "__main__":

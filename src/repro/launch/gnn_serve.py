@@ -34,15 +34,25 @@ def main():
                     help="fraction of queries that repeat earlier ones")
     ap.add_argument("--cache-size", type=int, default=65_536)
     ap.add_argument("--no-prewarm", action="store_true")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON of the serve "
+                         "rounds (serve_round / serve_sample spans)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the obs registry as JSONL")
     args = ap.parse_args()
 
     import jax
+    from repro import obs
     from repro.configs.gnn import small_gnn_config
     from repro.graph import partition_graph, synthetic_graph
     from repro.serve.gnn import (GNNServeConfig, GNNServeScheduler,
                                  ServeCacheConfig, layerwise_embeddings,
                                  warm_cache)
     from repro.train.gnn_trainer import init_model_params
+
+    obs.configure(obs.ObsConfig(
+        trace=args.trace_out is not None, trace_path=args.trace_out,
+        metrics_path=args.metrics_out))
 
     g = synthetic_graph(num_vertices=args.vertices, avg_degree=8,
                         num_classes=16, feat_dim=32, seed=0)
@@ -100,6 +110,9 @@ def main():
               f"({args.queries/t_warm:.0f} q/s), "
               f"{m['fast_path_hits'] - fp0} fast-path answers -> "
               f"{t_cold/t_warm:.1f}x cold throughput")
+
+    for path in obs.flush():
+        print(f"wrote {path}")
 
 
 if __name__ == "__main__":

@@ -48,11 +48,17 @@ def main():
                     help="disable cross-query neighborhood dedup")
     ap.add_argument("--round-batch", type=int, default=4,
                     help="serve rounds fused into one step/collective")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON of the serve "
+                         "rounds (serve_round / serve_sample spans)")
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the obs registry as JSONL")
     args = ap.parse_args()
 
     os.environ.setdefault(
         "XLA_FLAGS", f"--xla_force_host_platform_device_count={args.ranks}")
     import jax
+    from repro import obs
     from repro.configs.gnn import small_gnn_config
     from repro.graph import partition_graph, synthetic_graph
     from repro.launch.mesh import make_gnn_mesh
@@ -60,6 +66,10 @@ def main():
     from repro.serve.gnn.distributed import (DistGNNServeScheduler,
                                              DistServeConfig)
     from repro.train.gnn_trainer import init_model_params
+
+    obs.configure(obs.ObsConfig(
+        trace=args.trace_out is not None, trace_path=args.trace_out,
+        metrics_path=args.metrics_out))
 
     R = args.ranks
     g = synthetic_graph(num_vertices=args.vertices, avg_degree=8,
@@ -135,6 +145,9 @@ def main():
           f"({args.queries / dt2:.0f} q/s), {m['fast_path_hits']} fast-path, "
           f"cached-halo frac {m['cached_halo_frac']:.2f} -> "
           f"{dt / max(dt2, 1e-9):.1f}x first pass")
+
+    for path in obs.flush():
+        print(f"wrote {path}")
 
 
 if __name__ == "__main__":

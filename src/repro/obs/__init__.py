@@ -1,0 +1,179 @@
+"""Unified observability subsystem: metrics registry, phase-span tracing,
+and the paper-style epoch breakdown.
+
+One process-wide :class:`Observability` runtime (swap it with
+``configure``) owns
+
+  * a :class:`MetricsRegistry` — counters / gauges / histograms (exact
+    window p50/p99/max) labeled by rank/layer/subsystem; the single sink
+    for the trainer's step counters, both serve schedulers' latency
+    stats, the HEC/hot-tier cache counters, and the benchmark suite
+    recorder.  **Default on** (cheap python-side accumulation; never
+    touches device numerics),
+  * a :class:`Tracer` — ``span("sample") / span("stage") / span("fwd") /
+    span("aep_push") / span("bwd") / span("serve_round")`` phase spans
+    with per-rank thread-aware nesting, exported as Chrome trace-event
+    JSON (load in chrome://tracing / Perfetto).  **Opt-in**
+    (``ObsConfig(trace=True)`` or ``--trace-out`` on the launchers),
+  * the :class:`EpochBreakdown` / :class:`StepModel` report: per-epoch
+    sample / host-prep / H2D / forward / AEP-push / backward shares and
+    the overlap-efficiency figure (fraction of modeled push latency
+    hidden behind the backward pass).
+
+Instrumented code calls the module-level helpers::
+
+    from repro import obs
+    with obs.span("sample", epoch=ep, step=k):
+        ...
+    obs.count("halo_fetched", n, subsystem="serve")
+
+With everything disabled (``ObsConfig(enabled=False)``) every helper
+short-circuits to shared no-op objects: zero allocation per call, and —
+because observability only ever *reads* timings and host counters — the
+computed outputs are bit-identical with obs on, off, or tracing
+(pinned in ``tests/test_obs.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import List, Optional
+
+from repro.obs.breakdown import (EpochBreakdown, MEASURED_PHASES,  # noqa: F401
+                                 REPORT_PHASES, StepModel)
+from repro.obs.registry import (Counter, Gauge, Histogram,  # noqa: F401
+                                MetricsRegistry, hit_rate_metrics)
+from repro.obs.tracing import Tracer, validate_chrome_trace  # noqa: F401
+
+
+@dataclasses.dataclass(frozen=True)
+class ObsConfig:
+    """Observability runtime configuration.
+
+    ``enabled`` gates the metrics registry (counters/histograms/phase
+    timers — default on); ``trace`` gates span tracing (default off,
+    opt-in: it buffers one event per span).  ``trace_path`` /
+    ``metrics_path`` are written by ``flush()`` (the launchers'
+    ``--trace-out`` plumbing)."""
+    enabled: bool = True
+    trace: bool = False
+    trace_path: Optional[str] = None
+    metrics_path: Optional[str] = None
+    window: int = 8192            # histogram sample window
+    rank: int = 0                 # trace pid (one process == one rank here)
+
+
+class _NullSpan:
+    """Shared no-op context manager returned when obs is fully disabled."""
+    __slots__ = ()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+class _PhaseSpan:
+    """Times one phase: accumulates ``phase_seconds{phase=<name>}`` in the
+    registry (when enabled) and records a trace event (when tracing)."""
+    __slots__ = ("_obs", "_name", "_args", "_t0")
+
+    def __init__(self, runtime: "Observability", name: str, args: dict):
+        self._obs = runtime
+        self._name = name
+        self._args = args
+
+    def __enter__(self):
+        if self._obs.tracer.enabled:
+            self._obs.tracer.push(self._name)
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *exc):
+        t1 = time.perf_counter()
+        o = self._obs
+        if o.registry.enabled:
+            o.registry.counter("phase_seconds",
+                               phase=self._name).inc(t1 - self._t0)
+            o.registry.counter("phase_calls", phase=self._name).inc(1)
+        if o.tracer.enabled:
+            o.tracer.record(self._name, self._t0, t1, args=self._args)
+        return False
+
+
+class Observability:
+    """The runtime: one registry + one tracer (+ flush plumbing)."""
+
+    def __init__(self, cfg: Optional[ObsConfig] = None):
+        self.cfg = cfg or ObsConfig()
+        self.registry = MetricsRegistry(enabled=self.cfg.enabled,
+                                        window=self.cfg.window)
+        self.tracer = Tracer(enabled=self.cfg.trace, rank=self.cfg.rank)
+
+    def span(self, name: str, **args):
+        if not (self.registry.enabled or self.tracer.enabled):
+            return _NULL_SPAN
+        return _PhaseSpan(self, name, args)
+
+    def count(self, name: str, amount=1.0, **labels):
+        self.registry.counter(name, **labels).inc(amount)
+
+    def observe(self, name: str, value: float, **labels):
+        self.registry.histogram(name, **labels).observe(value)
+
+    def set_gauge(self, name: str, value: float, **labels):
+        self.registry.gauge(name, **labels).set(value)
+
+    def phase_seconds(self, phase: str) -> float:
+        """Accumulated seconds of one phase (0.0 while disabled)."""
+        return self.registry.value("phase_seconds", phase=phase)
+
+    def flush(self) -> List[str]:
+        """Write the configured trace/metrics files; returns paths."""
+        paths = []
+        if self.cfg.trace_path and self.tracer.enabled:
+            paths.append(self.tracer.write(self.cfg.trace_path))
+        if self.cfg.metrics_path and self.registry.enabled:
+            paths.append(self.registry.write_jsonl(self.cfg.metrics_path))
+        return paths
+
+
+_runtime = Observability()
+
+
+def get() -> Observability:
+    """The active process-wide runtime."""
+    return _runtime
+
+
+def configure(cfg: Optional[ObsConfig] = None) -> Observability:
+    """Install (and return) a fresh runtime; ``configure()`` restores the
+    defaults (counters on, tracing off)."""
+    global _runtime
+    _runtime = Observability(cfg)
+    return _runtime
+
+
+# -- module-level helpers (proxy to the active runtime) ----------------------
+def span(name: str, **args):
+    return _runtime.span(name, **args)
+
+
+def count(name: str, amount=1.0, **labels):
+    _runtime.count(name, amount, **labels)
+
+
+def observe(name: str, value: float, **labels):
+    _runtime.observe(name, value, **labels)
+
+
+def set_gauge(name: str, value: float, **labels):
+    _runtime.set_gauge(name, value, **labels)
+
+
+def flush() -> List[str]:
+    return _runtime.flush()

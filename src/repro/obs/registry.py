@@ -1,0 +1,259 @@
+"""Metrics registry — the single sink for the repo's runtime counters.
+
+Three instrument kinds, all dependency-free and cheap enough to stay on
+by default:
+
+  * :class:`Counter` — monotonically accumulating float (``inc``),
+  * :class:`Gauge` — last-written value (``set``),
+  * :class:`Histogram` — bounded-window sample accumulator with *exact*
+    percentiles over the window (``np.percentile`` on the retained
+    samples — no bucketing error), p50/p99/max/mean summaries, and the
+    legacy serving-latency ``metrics()`` dict (the p50/p99 code that used
+    to live in ``serve/gnn/scheduler.py``; both serve schedulers now
+    share this one implementation).
+
+Instruments are addressed by ``(name, labels)`` — e.g.
+``registry.counter("hec_hits", layer=0, subsystem="train")`` — and
+memoized, so call sites just re-request them.  A registry constructed
+with ``enabled=False`` hands out shared no-op instruments: the
+instrumented code path costs one dict lookup and nothing else, and the
+observed numerics are untouched either way (observability never feeds
+back into computation).
+
+The registry also carries an ordered **event log** (``log_event``) used
+by the benchmark suite recorder, and a JSONL sink (``write_jsonl``) that
+emits one line per instrument + one per event — the on-disk schema
+shared by runtime metrics and ``BENCH_<suite>.json`` artifacts.
+"""
+from __future__ import annotations
+
+import json
+import threading
+from collections import deque
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+
+def _key(name: str, labels: dict) -> str:
+    if not labels:
+        return name
+    inner = ",".join(f"{k}={labels[k]}" for k in sorted(labels))
+    return f"{name}{{{inner}}}"
+
+
+class Counter:
+    """Monotonic accumulator (float; increments may be numpy scalars)."""
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def inc(self, amount=1.0):
+        self.value += float(amount)
+
+
+class Gauge:
+    """Last-written value."""
+    __slots__ = ("value",)
+
+    def __init__(self):
+        self.value = 0.0
+
+    def set(self, value):
+        self.value = float(value)
+
+
+class Histogram:
+    """Bounded-window sample accumulator with exact window percentiles.
+
+    Keeps the most recent ``window`` samples (plus a lifetime count), so a
+    long-running process neither grows memory nor pays an ever-larger
+    percentile sort.  Percentiles are exact over the retained window —
+    ``np.percentile`` on the raw samples, no bucket approximation."""
+    __slots__ = ("samples", "count")
+
+    def __init__(self, window: int = 8192):
+        self.samples: deque = deque(maxlen=window)
+        self.count = 0
+
+    def observe(self, value: float):
+        self.samples.append(value)
+        self.count += 1
+
+    def reset(self):
+        self.samples.clear()
+        self.count = 0
+
+    def percentile(self, q: float) -> float:
+        if not self.samples:
+            return 0.0
+        return float(np.percentile(np.asarray(self.samples, np.float64), q))
+
+    def summary(self) -> dict:
+        """Exact window stats: count (lifetime), p50/p99/max/mean."""
+        if not self.samples:
+            return {"count": self.count, "p50": 0.0, "p99": 0.0,
+                    "max": 0.0, "mean": 0.0}
+        a = np.asarray(self.samples, np.float64)
+        return {"count": self.count,
+                "p50": float(np.percentile(a, 50)),
+                "p99": float(np.percentile(a, 99)),
+                "max": float(a.max()),
+                "mean": float(a.mean())}
+
+    def metrics(self, prefix: str = "latency") -> dict:
+        """The serving schedulers' latency dict (samples are seconds,
+        reported in ms) — byte-identical keys and values to the
+        previously duplicated per-scheduler implementation."""
+        if not self.samples:
+            return {f"{prefix}_count": self.count, f"{prefix}_p50_ms": 0.0,
+                    f"{prefix}_p99_ms": 0.0, f"{prefix}_mean_ms": 0.0}
+        a = np.asarray(self.samples, np.float64) * 1e3
+        return {f"{prefix}_count": self.count,
+                f"{prefix}_p50_ms": float(np.percentile(a, 50)),
+                f"{prefix}_p99_ms": float(np.percentile(a, 99)),
+                f"{prefix}_mean_ms": float(a.mean())}
+
+
+class _NullCounter(Counter):
+    __slots__ = ()
+
+    def inc(self, amount=1.0):
+        pass
+
+
+class _NullGauge(Gauge):
+    __slots__ = ()
+
+    def set(self, value):
+        pass
+
+
+class _NullHistogram(Histogram):
+    __slots__ = ()
+
+    def observe(self, value):
+        pass
+
+
+_NULL_COUNTER = _NullCounter()
+_NULL_GAUGE = _NullGauge()
+_NULL_HISTOGRAM = _NullHistogram()
+
+
+class MetricsRegistry:
+    """Labeled instrument store + ordered event log + JSONL sink."""
+
+    def __init__(self, enabled: bool = True, window: int = 8192):
+        self.enabled = enabled
+        self.window = window
+        self._lock = threading.Lock()
+        self._counters: Dict[str, Counter] = {}
+        self._gauges: Dict[str, Gauge] = {}
+        self._histograms: Dict[str, Histogram] = {}
+        self.events: List[dict] = []
+
+    # -- instrument accessors (memoized by name+labels) ----------------------
+    def _get(self, store, name, labels, make, null):
+        if not self.enabled:
+            return null
+        key = _key(name, labels)
+        inst = store.get(key)
+        if inst is None:
+            with self._lock:
+                inst = store.setdefault(key, make())
+        return inst
+
+    def counter(self, name: str, **labels) -> Counter:
+        return self._get(self._counters, name, labels, Counter, _NULL_COUNTER)
+
+    def gauge(self, name: str, **labels) -> Gauge:
+        return self._get(self._gauges, name, labels, Gauge, _NULL_GAUGE)
+
+    def histogram(self, name: str, **labels) -> Histogram:
+        return self._get(self._histograms, name, labels,
+                         lambda: Histogram(self.window), _NULL_HISTOGRAM)
+
+    # -- event log -----------------------------------------------------------
+    def log_event(self, kind: str, **payload):
+        if self.enabled:
+            self.events.append({"kind": kind, **payload})
+
+    def events_of(self, kind: str) -> Iterator[dict]:
+        return (e for e in self.events if e["kind"] == kind)
+
+    # -- aggregation / export ------------------------------------------------
+    def value(self, name: str, default: float = 0.0, **labels) -> float:
+        """Current counter/gauge value WITHOUT creating the instrument."""
+        key = _key(name, labels)
+        inst = self._counters.get(key) or self._gauges.get(key)
+        return inst.value if inst is not None else default
+
+    def rate(self, num: str, den: str, default: float = 0.0) -> float:
+        """Ratio of two counters (epoch-sum aggregation: summed numerator
+        over summed denominator, NOT a mean of per-step ratios)."""
+        d = self.value(den)
+        return self.value(num) / d if d else default
+
+    def snapshot(self) -> dict:
+        """Flat ``{key: value}`` view; histograms expand to their summary
+        sub-keys (``<key>.p50`` etc.)."""
+        out = {k: c.value for k, c in self._counters.items()}
+        out.update({k: g.value for k, g in self._gauges.items()})
+        for k, h in self._histograms.items():
+            for sk, sv in h.summary().items():
+                out[f"{k}.{sk}"] = sv
+        return out
+
+    def write_jsonl(self, path: str) -> str:
+        """One JSON line per instrument (``{"metric", "kind", ...}``) then
+        one per logged event (``{"event", ...}``)."""
+        with open(path, "w") as f:
+            for k, c in sorted(self._counters.items()):
+                f.write(json.dumps({"metric": k, "kind": "counter",
+                                    "value": c.value}) + "\n")
+            for k, g in sorted(self._gauges.items()):
+                f.write(json.dumps({"metric": k, "kind": "gauge",
+                                    "value": g.value}) + "\n")
+            for k, h in sorted(self._histograms.items()):
+                f.write(json.dumps({"metric": k, "kind": "histogram",
+                                    **h.summary()}) + "\n")
+            for e in self.events:
+                f.write(json.dumps({"event": e["kind"],
+                                    **{k: v for k, v in e.items()
+                                       if k != "kind"}}) + "\n")
+        return path
+
+    def reset(self):
+        with self._lock:
+            self._counters.clear()
+            self._gauges.clear()
+            self._histograms.clear()
+            self.events.clear()
+
+
+def hit_rate_metrics(reg: MetricsRegistry) -> dict:
+    """Derive per-layer cache hit rates from epoch-summed counters.
+
+    For every layer ``l`` with a ``hec_hits_l{l}`` counter:
+
+      * ``hec_hit_rate_l{l}``  = sum(hits)  / sum(halos)   (0 when no halos)
+      * ``hot_hit_rate_l{l}``  = sum(hot_hits) / sum(halos) — only when the
+        hot tier recorded anything (``hot_hits_l{l}`` exists); hot-tier
+        hits are a subset of the halo rows, so the rate shares the halo
+        denominator and reads as "fraction of halo rows the replicated
+        tier served locally".
+
+    This is the trainer's ``_epoch_mean`` aggregation, moved behind the
+    registry so every hit-rate in the repo is derived one way."""
+    out = {}
+    for key in list(reg._counters):
+        if not key.startswith("hec_hits_l"):
+            continue
+        l = key[len("hec_hits_l"):]
+        out[f"hec_hit_rate_l{l}"] = reg.rate(key, f"hec_halos_l{l}")
+        if f"hot_hits_l{l}" in reg._counters:
+            out[f"hot_hit_rate_l{l}"] = reg.rate(f"hot_hits_l{l}",
+                                                 f"hec_halos_l{l}")
+    return out

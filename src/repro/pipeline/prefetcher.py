@@ -22,6 +22,7 @@ from typing import Callable, Iterator, List, Sequence
 
 import numpy as np
 
+from repro import obs
 from repro.configs.gnn import GNNConfig
 from repro.graph.partition import PartitionSet
 from repro.graph.sampling import (epoch_minibatches, pad_schedule,
@@ -62,9 +63,14 @@ class SamplingPlan:
         rng = self.step_rng(epoch, step)
         sampler = (sample_blocks_vectorized if cfg.pipeline.vectorized
                    else sample_blocks)
-        mbs = [sampler(self.ps.parts[r], seed_lists[r], cfg.fanouts, rng,
-                       cfg.batch_size) for r in range(self.ps.num_parts)]
-        return stack_ranks(mbs)
+        # the two host phases of minibatch preparation, timed separately:
+        # CSR fanout sampling vs the [R, ...] stacking/padding host prep
+        # (spans run on whichever prefetch worker executes the step)
+        with obs.span("sample", epoch=epoch, step=step):
+            mbs = [sampler(self.ps.parts[r], seed_lists[r], cfg.fanouts, rng,
+                           cfg.batch_size) for r in range(self.ps.num_parts)]
+        with obs.span("host_prep", epoch=epoch, step=step):
+            return stack_ranks(mbs)
 
 
 def prefetch(make_fn: Callable[[int], dict], num_steps: int,

@@ -20,6 +20,7 @@ from typing import Iterator, List, Sequence
 import jax
 import numpy as np
 
+from repro import obs
 from repro.configs.gnn import GNNConfig
 from repro.graph.partition import PartitionSet
 from repro.pipeline.prefetcher import SamplingPlan, prefetch
@@ -37,8 +38,16 @@ def device_stage(host_batches: Iterator[dict], double_buffer: bool = True,
     P("data"))``) lands the [R, ...] batch directly in its per-rank layout,
     so the shard_map'd step doesn't reshard on the critical path.
     """
-    put = (lambda h: jax.device_put(h, sharding)) if sharding is not None \
-        else jax.device_put
+    raw_put = (lambda h: jax.device_put(h, sharding)) \
+        if sharding is not None else jax.device_put
+
+    def put(host):
+        # device_put dispatches asynchronously: the span measures the
+        # host-side staging cost (layout + transfer issue), which is the
+        # part that can sit on the step loop's critical path
+        with obs.span("stage"):
+            return raw_put(host)
+
     if not double_buffer:
         for host in host_batches:
             yield put(host)

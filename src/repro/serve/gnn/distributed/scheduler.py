@@ -70,6 +70,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.cache import hec as hec_lib
 from repro.cache import hot_tier as hot_lib
 from repro.cache.hot_tier import HotTierCache
@@ -493,44 +494,49 @@ class DistGNNServeScheduler(ServeFrontend):
         cfg = self.cfg
         NB = self.scfg.round_batch
         slots = self.scfg.num_slots
-        blocks = []
-        for r in range(self.num_ranks):
-            expandable = self._expandable(r)
-            segs = []
-            for n in range(NB):
-                grp = round_groups[r][n * slots:(n + 1) * slots]
-                seeds = np.array([local for local, _ in grp], np.int64)
-                rng = np.random.default_rng(
-                    [self.scfg.sample_seed, self._mb_counter, r] +
-                    ([n] if NB > 1 else []))
-                segs.append(sample_blocks_vectorized(
-                    self.ps.parts[r], seeds, cfg.fanouts, rng, slots,
-                    expandable=expandable))
-            blocks.append(concat_blocks(segs))
-        self._mb_counter += 1
-        mb = jax.tree_util.tree_map(jnp.asarray, stack_ranks(blocks))
-        states = self.cache.states if self.scfg.cache.enabled \
-            else self.cache.init_states()
-        tstates = self.hot.states if self.hot is not None else []
-        out, out_valid, new_states, new_t, stats = self._step(
-            self.params, states, tstates, self.data, mb)
-        out = np.asarray(out)
-        out_valid = np.asarray(out_valid)
-        stats = jax.tree_util.tree_map(np.asarray, stats)
-        self.cache.record(stats["hits"].sum(0), stats["lookups"].sum(0))
-        self.cache.record_halo(stats)
-        if self.scfg.cache.enabled:
-            self.cache.states = new_states
-            self.cache.sync_host()
-        if self.hot is not None:
-            self.hot.states = new_t
-            self.hot.hot_hits += int(stats["hot_hits"].sum())
-            self.hot.sync_host()
-        self.steps_run += 1
-        for r, groups in enumerate(round_groups):
-            for i, (local, reqs) in enumerate(groups):
-                assert out_valid[r, i], \
-                    f"requests {[q.rid for q in reqs]} " \
-                    f"(vid {reqs[0].vid}) not served"
-                for req in reqs:
-                    self._finish(req, out[r, i], "compute")
+        with obs.span("serve_round", rounds=NB):
+            with obs.span("serve_sample", microbatch=self._mb_counter):
+                blocks = []
+                for r in range(self.num_ranks):
+                    expandable = self._expandable(r)
+                    segs = []
+                    for n in range(NB):
+                        grp = round_groups[r][n * slots:(n + 1) * slots]
+                        seeds = np.array([local for local, _ in grp],
+                                         np.int64)
+                        rng = np.random.default_rng(
+                            [self.scfg.sample_seed, self._mb_counter, r] +
+                            ([n] if NB > 1 else []))
+                        segs.append(sample_blocks_vectorized(
+                            self.ps.parts[r], seeds, cfg.fanouts, rng,
+                            slots, expandable=expandable))
+                    blocks.append(concat_blocks(segs))
+            self._mb_counter += 1
+            mb = jax.tree_util.tree_map(jnp.asarray, stack_ranks(blocks))
+            states = self.cache.states if self.scfg.cache.enabled \
+                else self.cache.init_states()
+            tstates = self.hot.states if self.hot is not None else []
+            out, out_valid, new_states, new_t, stats = self._step(
+                self.params, states, tstates, self.data, mb)
+            out = np.asarray(out)
+            out_valid = np.asarray(out_valid)
+            stats = jax.tree_util.tree_map(np.asarray, stats)
+            self.cache.record(stats["hits"].sum(0), stats["lookups"].sum(0))
+            self.cache.record_halo(stats)
+            if self.scfg.cache.enabled:
+                self.cache.states = new_states
+                self.cache.sync_host()
+            if self.hot is not None:
+                self.hot.states = new_t
+                n_hot = int(stats["hot_hits"].sum())
+                self.hot.hot_hits += n_hot
+                obs.count("hot_hits", n_hot)
+                self.hot.sync_host()
+            self.steps_run += 1
+            for r, groups in enumerate(round_groups):
+                for i, (local, reqs) in enumerate(groups):
+                    assert out_valid[r, i], \
+                        f"requests {[q.rid for q in reqs]} " \
+                        f"(vid {reqs[0].vid}) not served"
+                    for req in reqs:
+                        self._finish(req, out[r, i], "compute")

@@ -53,6 +53,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.cache import hec as hec_lib
 from repro.graph.partition import Partition
 from repro.models.gnn import gat as gat_lib
@@ -81,34 +82,13 @@ class AdmissionRejected(RuntimeError):
     unbounded enqueue->answer latency tail."""
 
 
-class LatencyStats:
+class LatencyStats(obs.Histogram):
     """Per-request enqueue->answer latency accumulator (p50/p99 metrics).
 
-    Keeps a bounded window of the most recent ``window`` samples (plus a
-    lifetime count), so a long-running server neither grows memory nor
-    pays an ever-larger percentile sort in ``metrics()``."""
-
-    def __init__(self, window: int = 8192):
-        self.samples: deque = deque(maxlen=window)
-        self.count = 0
-
-    def observe(self, seconds: float):
-        self.samples.append(seconds)
-        self.count += 1
-
-    def reset(self):
-        self.samples.clear()
-        self.count = 0
-
-    def metrics(self, prefix: str = "latency") -> dict:
-        if not self.samples:
-            return {f"{prefix}_count": self.count, f"{prefix}_p50_ms": 0.0,
-                    f"{prefix}_p99_ms": 0.0, f"{prefix}_mean_ms": 0.0}
-        a = np.asarray(self.samples, np.float64) * 1e3
-        return {f"{prefix}_count": self.count,
-                f"{prefix}_p50_ms": float(np.percentile(a, 50)),
-                f"{prefix}_p99_ms": float(np.percentile(a, 99)),
-                f"{prefix}_mean_ms": float(a.mean())}
+    Now just the obs :class:`~repro.obs.registry.Histogram` — the
+    bounded-window exact-percentile accumulator both schedulers used to
+    duplicate — kept under its old name; ``metrics()`` produces the
+    identical latency dict (``tests/test_obs.py`` pins the equivalence)."""
 
 
 @dataclasses.dataclass
@@ -164,6 +144,8 @@ class ServeFrontend:
         req.served_by = served_by
         req.t_done = time.perf_counter()
         self.latency.observe(req.t_done - req.t_submit)
+        obs.observe("serve_latency_s", req.t_done - req.t_submit,
+                    subsystem="serve")
         self.queries_served += 1
 
     def _frontend_metrics(self, queue_depth: int) -> dict:
@@ -256,9 +238,11 @@ class GNNServeScheduler(ServeFrontend):
         rng = np.random.default_rng(
             [self.scfg.sample_seed, self._mb_counter])
         self._mb_counter += 1
-        blocks = sample_blocks_vectorized(
-            self.part, np.asarray(vids, np.int64), self.cfg.fanouts, rng,
-            self.scfg.num_slots, expandable=self.cache.expandable_masks())
+        with obs.span("serve_sample", microbatch=self._mb_counter - 1):
+            blocks = sample_blocks_vectorized(
+                self.part, np.asarray(vids, np.int64), self.cfg.fanouts,
+                rng, self.scfg.num_slots,
+                expandable=self.cache.expandable_masks())
         return {
             "seeds": jnp.asarray(blocks.seeds.astype(np.int32)),
             "seed_mask": jnp.asarray(blocks.seed_mask),
@@ -352,24 +336,25 @@ class GNNServeScheduler(ServeFrontend):
     def _run_microbatch(self, groups: List):
         """One compiled step over the groups' unique vids; every request
         in a group receives the same slot's answer (dedup scatter-back)."""
-        mb = self._sample([vid for vid, _ in groups])
-        states = self.cache.states
-        if not self.scfg.cache.enabled:
-            # baseline mode: every microbatch sees an empty cache, so
-            # "disabled" really is pure on-demand sampling + compute
-            states = self.cache.init_states()
-        out, out_valid, new_states, stats = self._step(
-            self.params, states, self.features, mb)
-        out = np.asarray(out)
-        out_valid = np.asarray(out_valid)
-        self.cache.record(np.asarray(stats["hits"]),
-                          np.asarray(stats["lookups"]))
-        if self.scfg.cache.enabled:
-            self.cache.states = new_states
-            self.cache.sync_host()
-        self.steps_run += 1
-        for i, (vid, reqs) in enumerate(groups):
-            assert out_valid[i], \
-                f"requests {[q.rid for q in reqs]} (vid {vid}) not served"
-            for req in reqs:
-                self._finish(req, out[i], "compute")
+        with obs.span("serve_round", slots=len(groups)):
+            mb = self._sample([vid for vid, _ in groups])
+            states = self.cache.states
+            if not self.scfg.cache.enabled:
+                # baseline mode: every microbatch sees an empty cache, so
+                # "disabled" really is pure on-demand sampling + compute
+                states = self.cache.init_states()
+            out, out_valid, new_states, stats = self._step(
+                self.params, states, self.features, mb)
+            out = np.asarray(out)
+            out_valid = np.asarray(out_valid)
+            self.cache.record(np.asarray(stats["hits"]),
+                              np.asarray(stats["lookups"]))
+            if self.scfg.cache.enabled:
+                self.cache.states = new_states
+                self.cache.sync_host()
+            self.steps_run += 1
+            for i, (vid, reqs) in enumerate(groups):
+                assert out_valid[i], \
+                    f"requests {[q.rid for q in reqs]} (vid {vid}) not served"
+                for req in reqs:
+                    self._finish(req, out[i], "compute")

@@ -31,6 +31,7 @@ synchronous reference path.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import List, Optional
 
 import jax
@@ -38,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro import obs
 from repro.cache import hec as hec_lib
 from repro.cache import hot_tier as hot_lib
 from repro.comm.engine import HaloExchangeEngine
@@ -93,9 +95,12 @@ def sample_step(ps: PartitionSet, cfg: GNNConfig, seed_lists, rng) -> dict:
 def _epoch_mean(ep_metrics):
     """Aggregate per-step metrics: loss/acc weighted by real example count
     (padded empty batches contribute zero weight), counters plain-averaged.
-    Also derives per-epoch AEP/HEC hit rates (``hec_hit_rate_l{l}``) as
-    epoch-summed hits / epoch-summed halos, so cache behavior is observable
-    per epoch without re-deriving it from per-step means."""
+    Per-epoch cache hit rates are derived by the obs registry's sum-ratio
+    aggregation (``repro.obs.hit_rate_metrics``): epoch-summed hits over
+    epoch-summed halos — ``hec_hit_rate_l{l}`` for the HEC, and, when the
+    replicated hot tier is on, ``hot_hit_rate_l{l}`` (fraction of halo
+    rows the local replica served — hot hits share the halo denominator,
+    so HEC + hot rates compose to the total locally-served fraction)."""
     if not ep_metrics:                   # zero-step epoch: no train seeds
         return {"examples": 0.0, "loss": 0.0, "acc": 0.0}
     w = np.array([m.get("examples", 1.0) for m in ep_metrics], np.float64)
@@ -109,12 +114,15 @@ def _epoch_mean(ep_metrics):
             out[key] = float(total)
         else:
             out[key] = float(vals.mean())
-    for key in ep_metrics[0]:
-        if key.startswith("hec_hits_l"):
-            l = key[len("hec_hits_l"):]
-            hits = sum(m[key] for m in ep_metrics)
-            halos = sum(m.get(f"hec_halos_l{l}", 0.0) for m in ep_metrics)
-            out[f"hec_hit_rate_l{l}"] = hits / halos if halos else 0.0
+    # epoch-local registry: counters sum across steps, rates derive once
+    # (independent of the process-wide obs config — these rates are part
+    # of the training history contract, not optional telemetry)
+    reg = obs.MetricsRegistry(enabled=True)
+    for m in ep_metrics:
+        for key, v in m.items():
+            if key.startswith(("hec_hits_l", "hec_halos_l", "hot_hits_l")):
+                reg.counter(key).inc(v)
+    out.update(obs.hit_rate_metrics(reg))
     return out
 
 
@@ -442,6 +450,10 @@ class DistTrainer:
         step_fn = step_fn or self.make_step(dist_data)
         history = []
         step_idx = int(state["step"])
+        reg = obs.get().registry
+        phases = ("sample", "host_prep", "stage", "step")
+        phase_at = lambda: {p: reg.value("phase_seconds", phase=p)
+                            for p in phases}
         for ep in range(num_epochs):
             if pipeline is not None:
                 mb_iter = pipeline.epoch_batches(ep)
@@ -449,15 +461,30 @@ class DistTrainer:
                 from repro.train.data import gnn_epoch_iterator
                 mb_iter = (mb for mb, _ in gnn_epoch_iterator(ps, cfg, rng))
             ep_metrics = []
+            ph0, wall0 = phase_at(), time.perf_counter()
             for mb in mb_iter:
-                (state["params"], state["opt_state"], state["hec"],
-                 state["hot"], state["inflight"], metrics) = step_fn(
-                    state["params"], state["opt_state"], state["hec"],
-                    state["hot"], state["inflight"], dist_data, mb,
-                    jnp.uint32(step_idx))
-                ep_metrics.append({k_: float(v) for k_, v in metrics.items()})
+                # the span covers dispatch AND the blocking host transfer
+                # of the metrics — i.e. the device step's wall time as
+                # seen by the training loop
+                with obs.span("step", epoch=ep, step=step_idx):
+                    (state["params"], state["opt_state"], state["hec"],
+                     state["hot"], state["inflight"], metrics) = step_fn(
+                        state["params"], state["opt_state"], state["hec"],
+                        state["hot"], state["inflight"], dist_data, mb,
+                        jnp.uint32(step_idx))
+                    ep_metrics.append(
+                        {k_: float(v) for k_, v in metrics.items()})
                 step_idx += 1
             mean = _epoch_mean(ep_metrics)
+            if reg.enabled:
+                # per-epoch phase seconds (sample/host_prep run on the
+                # prefetch workers, so an epoch is credited with whatever
+                # preparation completed during it — exact at depth 1);
+                # EpochBreakdown.from_history renders the paper table
+                ph1 = phase_at()
+                for p in phases:
+                    mean[f"t_{p}"] = ph1[p] - ph0[p]
+                mean["t_wall"] = time.perf_counter() - wall0
             history.append(mean)
             if log_every:
                 hl = [f"l{l}:{mean.get(f'hec_hits_l{l}', 0)/max(mean.get(f'hec_halos_l{l}',1),1):.2f}"
