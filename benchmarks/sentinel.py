@@ -1,0 +1,225 @@
+"""Perf-regression sentinel: compare a benchmark run against a committed
+baseline.
+
+Reads every ``BENCH_<suite>.json`` in ``--current`` (a ``benchmarks/run.py
+--out-dir``), extracts the timing surface — per-row ``us_per_call`` values
+plus any numeric RESULT keys with a ``_us``/``_ms``/``_s`` suffix — and
+compares it against ``--baseline`` with noise-tolerant thresholds:
+
+* a measurement regresses when ``current > factor * max(baseline, floor)``
+  where ``factor`` is ``--time-factor`` (default 4x: smoke numbers are
+  noisy, especially under CI contention; the sentinel catches order-of-
+  magnitude cliffs, not percent drifts) and ``floor`` is ``--min-us``
+  (sub-floor timings are pure noise and never regress);
+* a suite or row present in the baseline but missing from the current run
+  is a regression (coverage loss hides cliffs);
+* new suites/rows are reported but pass — re-bootstrap to adopt them;
+* improvements beyond ``factor`` are reported as candidates for a
+  baseline refresh.
+
+It also validates the run's ``TRACE_obs.json`` (Chrome-trace schema + the
+required phase spans), so a silently-dead tracer fails CI too.
+
+Bootstrap mode writes the baseline from the current run:
+
+  python -m benchmarks.run --smoke --out-dir bench-artifacts
+  python -m benchmarks.sentinel --current bench-artifacts \
+      --baseline benchmarks/baselines/smoke.json --bootstrap
+
+CI then runs the same command without ``--bootstrap`` and fails (exit 1)
+on any regression against the committed baseline.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+SCHEMA_VERSION = 1
+REQUIRED_TRACE_SPANS = {"sample", "host_prep", "stage", "step"}
+TIMING_SUFFIXES = ("_us", "_ms", "_s")
+# convert any timing key to microseconds so --min-us applies uniformly
+_TO_US = {"_us": 1.0, "_ms": 1e3, "_s": 1e6}
+
+
+def _timing_keys(payload, prefix=""):
+    """Flatten a RESULT payload to ``{dotted.key: microseconds}`` over the
+    numeric leaves whose key carries a timing suffix."""
+    out = {}
+    if not isinstance(payload, dict):
+        return out
+    for k, v in payload.items():
+        key = f"{prefix}{k}"
+        if isinstance(v, dict):
+            out.update(_timing_keys(v, prefix=f"{key}."))
+        elif isinstance(v, (int, float)) and not isinstance(v, bool):
+            for suf in TIMING_SUFFIXES:
+                if k.endswith(suf):
+                    out[key] = float(v) * _TO_US[suf]
+                    break
+    return out
+
+
+def load_run(out_dir):
+    """``{suite: {"rows": {name: us}, "result": {key: us}}}`` from every
+    BENCH_<suite>.json in ``out_dir``."""
+    suites = {}
+    for path in sorted(glob.glob(os.path.join(out_dir, "BENCH_*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        name = rec.get("suite") or os.path.basename(path)[6:-5]
+        rows = {}
+        for row in rec.get("rows", []):
+            # duplicate row names keep the last measurement (suites emit
+            # progressive refinements under one label)
+            rows[row["name"]] = float(row["us_per_call"])
+        suites[name] = {"rows": rows,
+                        "result": _timing_keys(rec.get("result") or {})}
+    return suites
+
+
+def check_trace(out_dir, errors):
+    """Validate TRACE_obs.json if the obs suite ran in this artifact dir."""
+    path = os.path.join(out_dir, "TRACE_obs.json")
+    if not os.path.exists(path):
+        return None
+    from repro.obs import validate_chrome_trace
+    try:
+        with open(path) as f:
+            trace = json.load(f)
+        n = validate_chrome_trace(trace)
+    except ValueError as e:
+        errors.append(f"TRACE_obs.json: invalid Chrome trace: {e}")
+        return path
+    names = {ev.get("name") for ev in trace["traceEvents"]
+             if ev.get("ph") == "X"}
+    missing = REQUIRED_TRACE_SPANS - names
+    if missing:
+        errors.append(f"TRACE_obs.json: required phase spans missing: "
+                      f"{sorted(missing)} (have {sorted(names)})")
+    else:
+        print(f"trace ok: {path} ({n} spans, all required phases present)")
+    return path
+
+
+def compare(current, baseline, factor, min_us):
+    """Returns ``(errors, notes)``: errors fail the run, notes don't."""
+    errors, notes = [], []
+
+    def cmp_one(label, cur, base):
+        floor = max(base, min_us)
+        if cur > factor * floor:
+            errors.append(
+                f"{label}: {cur:.1f}us vs baseline {base:.1f}us "
+                f"(> {factor:g}x threshold {factor * floor:.1f}us)")
+        elif base > min_us and cur * factor < base:
+            notes.append(
+                f"{label}: improved {base:.1f}us -> {cur:.1f}us "
+                f"(>{factor:g}x; consider refreshing the baseline)")
+
+    for suite, brec in baseline["suites"].items():
+        crec = current.get(suite)
+        if crec is None:
+            errors.append(f"suite '{suite}' in baseline but missing from "
+                          f"current run")
+            continue
+        for kind in ("rows", "result"):
+            for name, base_us in brec.get(kind, {}).items():
+                cur_us = crec[kind].get(name)
+                if cur_us is None:
+                    errors.append(f"{suite}/{name}: in baseline but missing "
+                                  f"from current run")
+                else:
+                    cmp_one(f"{suite}/{name}", cur_us, base_us)
+            for name in crec[kind]:
+                if name not in brec.get(kind, {}):
+                    notes.append(f"{suite}/{name}: new (not in baseline; "
+                                 f"re-bootstrap to adopt)")
+    for suite in current:
+        if suite not in baseline["suites"]:
+            notes.append(f"suite '{suite}': new (not in baseline; "
+                         f"re-bootstrap to adopt)")
+    return errors, notes
+
+
+def bootstrap(current, path, factor, min_us):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    n_rows = sum(len(r["rows"]) + len(r["result"])
+                 for r in current.values())
+    with open(path, "w") as f:
+        json.dump({"schema": SCHEMA_VERSION,
+                   "time_factor": factor, "min_us": min_us,
+                   "suites": current}, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"bootstrapped baseline: {path} "
+          f"({len(current)} suites, {n_rows} measurements)")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="compare BENCH_*.json artifacts against a committed "
+                    "perf baseline")
+    ap.add_argument("--current", required=True, metavar="DIR",
+                    help="artifact dir from benchmarks/run.py --out-dir")
+    ap.add_argument("--baseline", required=True, metavar="PATH",
+                    help="committed baseline JSON "
+                         "(e.g. benchmarks/baselines/smoke.json)")
+    ap.add_argument("--bootstrap", action="store_true",
+                    help="write the baseline from the current run and exit")
+    ap.add_argument("--time-factor", type=float, default=None,
+                    help="regression threshold multiplier (default: the "
+                         "baseline's recorded factor, else 4.0)")
+    ap.add_argument("--min-us", type=float, default=None,
+                    help="noise floor in us; sub-floor baselines compare "
+                         "against the floor (default: baseline's, else 200)")
+    args = ap.parse_args(argv)
+
+    current = load_run(args.current)
+    if not current:
+        print(f"sentinel: no BENCH_*.json under {args.current}",
+              file=sys.stderr)
+        return 1
+
+    if args.bootstrap or not os.path.exists(args.baseline):
+        if not args.bootstrap:
+            print(f"sentinel: no baseline at {args.baseline} — "
+                  f"bootstrapping (commit the file to arm the sentinel)")
+        bootstrap(current, args.baseline,
+                  args.time_factor if args.time_factor is not None else 4.0,
+                  args.min_us if args.min_us is not None else 200.0)
+        return 0
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    if baseline.get("schema") != SCHEMA_VERSION:
+        print(f"sentinel: baseline schema "
+              f"{baseline.get('schema')!r} != {SCHEMA_VERSION}; "
+              f"re-bootstrap with --bootstrap", file=sys.stderr)
+        return 1
+    factor = (args.time_factor if args.time_factor is not None
+              else float(baseline.get("time_factor", 4.0)))
+    min_us = (args.min_us if args.min_us is not None
+              else float(baseline.get("min_us", 200.0)))
+
+    errors, notes = compare(current, baseline, factor, min_us)
+    check_trace(args.current, errors)
+
+    for n in notes:
+        print(f"note: {n}")
+    if errors:
+        for e in errors:
+            print(f"REGRESSION: {e}", file=sys.stderr)
+        print(f"sentinel: {len(errors)} regression(s) vs {args.baseline} "
+              f"(factor {factor:g}x, floor {min_us:g}us)", file=sys.stderr)
+        return 1
+    n_meas = sum(len(r.get("rows", {})) + len(r.get("result", {}))
+                 for r in baseline["suites"].values())
+    print(f"sentinel: PASS — {n_meas} measurements within {factor:g}x of "
+          f"{args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

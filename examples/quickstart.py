@@ -1,17 +1,20 @@
 """Quickstart: train GraphSAGE with DistGNN-MB's HEC+AEP on 4 ranks.
 
 Run:
-  PYTHONPATH=src python examples/quickstart.py
+  PYTHONPATH=src python examples/quickstart.py \
+      [--metrics-out metrics.jsonl] [--trace-out trace.json]
 (the 4 "ranks" are forced host devices; on a real cluster each rank is a
 chip and XLA_FLAGS is not needed)
 """
 import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 
+import argparse
 import time
 
 import jax
 
+from repro import obs
 from repro.configs.gnn import small_gnn_config
 from repro.graph import partition_graph, synthetic_graph
 from repro.launch.mesh import ICI_BW, make_gnn_mesh
@@ -21,6 +24,17 @@ RANKS = 4
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--metrics-out", default=None, metavar="PATH",
+                    help="write the obs registry (incl. per-rank health "
+                         "series) as JSONL")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="write a Chrome trace-event JSON of the phase spans")
+    args = ap.parse_args()
+    obs.configure(obs.ObsConfig(
+        trace=args.trace_out is not None, trace_path=args.trace_out,
+        metrics_path=args.metrics_out))
+
     # 1. a graph (synthetic stand-in for OGBN; real loaders drop in here)
     g = synthetic_graph(num_vertices=10_000, avg_degree=10, num_classes=8,
                         feat_dim=32, seed=0)
@@ -65,6 +79,9 @@ def main():
           f"({push_b * steps / 1e6:.1f} MB overlapped over the run); "
           f"modeled push latency hidden: {hidden * 100:.0f}% "
           f"(push {push_s * 1e6:.2f}us/device vs step {step_s * 1e3:.1f}ms)")
+
+    for path in obs.flush():
+        print(f"wrote {path}")
 
 
 if __name__ == "__main__":

@@ -408,6 +408,8 @@ class HaloExchangeEngine:
         dim = h_solid[0].shape[1] if len(h_solid) else 0
         rows_out: List[np.ndarray] = []
         nbytes = 0
+        rank_rows = np.zeros(R, np.int64)
+        rank_bytes = np.zeros(R, np.int64)
         with obs.span("offline_exchange", ranks=R):
             for j in range(R):
                 rows = np.zeros((int(plan.num_halo[j]), dim), np.float32)
@@ -416,7 +418,19 @@ class HaloExchangeEngine:
                         continue
                     payload = h_solid[i][plan.send_local[i][j]]
                     rows[plan.recv_pos[i][j]] = payload
-                    nbytes += payload.nbytes + len(plan.send_local[i][j]) * 4
+                    moved = payload.nbytes + len(plan.send_local[i][j]) * 4
+                    nbytes += moved
+                    rank_rows[j] += len(plan.send_local[i][j])
+                    rank_bytes[j] += moved
                 rows_out.append(rows)
         obs.count("offline_exchange_bytes", nbytes)
+        # per-rank inbound series for the health plane: one exchange's
+        # receiver-side rows/bytes, published as rank-labeled counters +
+        # cluster skew views (the live counterpart of the plan-time
+        # expectation in ExchangePlan.expected_inbound_rows)
+        reg = obs.get().registry
+        if reg.enabled:
+            obs.publish_rank_series(
+                reg, {"rank_exchange_rows": rank_rows,
+                      "rank_exchange_bytes": rank_bytes})
         return rows_out, nbytes

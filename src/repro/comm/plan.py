@@ -149,6 +149,18 @@ class ExchangePlan:
         """Exact payload (+ vid tags) of one full halo exchange at ``dim``."""
         return self.halo_rows_total * (dim * itemsize + 4)
 
+    def expected_inbound_rows(self) -> np.ndarray:
+        """[R] plan-time expectation of halo rows each rank RECEIVES in
+        one full exchange (off-diagonal column sums of ``pair_rows``).
+
+        This is the static edge-cut profile the partitioner committed to;
+        the health plane's edge-cut-drift detector compares the live
+        per-rank halo-row distribution against it — sustained divergence
+        means the graph (or the access pattern) has drifted from the
+        partition and is the re-partitioning trigger."""
+        inbound = self.pair_rows.sum(axis=0) - np.diag(self.pair_rows)
+        return inbound.astype(np.int64)
+
     def modeled_remote_rows(self, degrees: np.ndarray, rounds: int = 1,
                             refresh_every: int = 1) -> dict:
         """Remote-fetch row model over a window of ``rounds`` sampled

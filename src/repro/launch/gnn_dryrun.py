@@ -36,6 +36,9 @@ def main():
                          "phase spans (load in chrome://tracing / Perfetto)")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write the obs registry as JSONL")
+    ap.add_argument("--flight-dir", default=".", metavar="DIR",
+                    help="where the health plane dumps FLIGHT_*.json on a "
+                         "detection or an escaped exception")
     args = ap.parse_args()
 
     import jax
@@ -139,12 +142,29 @@ def main():
     # fwd / exposed-push / bwd by the roofline model (the step is ONE
     # fused XLA program — its interior cannot be host-timed), and the
     # modeled sub-phases are emitted as trace spans on virtual tracks
-    with obs.span("step", step=0):
+    health = obs.HealthPlane(
+        obs.HealthConfig(flight_dir=args.flight_dir), num_ranks=R,
+        expected_halo_rows=[p.num_halo for p in ps.parts])
+    with health.guard("dryrun_step"), obs.span("step", step=0):
         t0 = time.perf_counter()
-        jax.block_until_ready(compiled(
+        out = jax.block_until_ready(compiled(
             state["params"], state["opt_state"], state["hec"], state["hot"],
             state["inflight"], dd, mb, np.uint32(0)))
         t_step = time.perf_counter() - t0
+    # per-rank telemetry shard of the executed step -> one health window
+    import jax.tree_util as jtu
+    acc = health.new_accumulator()
+    acc.add(jtu.tree_map(np.asarray, out[5]))
+    totals = acc.finish()
+    totals["rank_step_seconds"] = np.full(R, t_step)
+    obs.publish_rank_series(obs.get().registry, totals)
+    health.observe_epoch(totals, wall_s=t_step)
+    halo = totals["rank_halo_rows"]
+    skew = obs.skew_ratio(halo)
+    print(f"health: per-rank halo rows min={halo.min():.0f} "
+          f"max={halo.max():.0f} "
+          f"skew={'n/a' if skew is None else f'{skew:.2f}'}; "
+          f"{len(health.detections)} detections")
     fwd_s, push_s, bwd_s = model.split_step(t_step)
     tracer = obs.get().tracer
     if tracer.enabled:

@@ -39,6 +39,11 @@ def main():
                          "rounds (serve_round / serve_sample spans)")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write the obs registry as JSONL")
+    ap.add_argument("--flight-dir", default=".", metavar="DIR",
+                    help="where the health plane dumps FLIGHT_*.json on a "
+                         "detection or an escaped exception")
+    ap.add_argument("--slo-p99-ms", type=float, default=None,
+                    help="arm the SLO-burn detector with this p99 target")
     args = ap.parse_args()
 
     import jax
@@ -63,11 +68,18 @@ def main():
     cfg = small_gnn_config(args.model, batch_size=64, feat_dim=32,
                            num_classes=16, fanouts=(5, 10), hidden_size=64)
     params = init_model_params(jax.random.key(0), cfg)
+    health = obs.HealthPlane(
+        obs.HealthConfig(
+            flight_dir=args.flight_dir,
+            slo_p99_s=args.slo_p99_ms / 1e3
+            if args.slo_p99_ms is not None else None),
+        num_ranks=1)
     srv = GNNServeScheduler(
         cfg, params, part,
         GNNServeConfig(num_slots=args.slots,
                        cache=ServeCacheConfig(cache_size=args.cache_size,
-                                              ways=8)))
+                                              ways=8)),
+        health=health)
 
     rng = np.random.default_rng(0)
     n_unique = max(1, int(round(args.queries * (1 - args.overlap))))
@@ -83,7 +95,8 @@ def main():
     srv.cache.reset_counters()
 
     t0 = time.perf_counter()
-    srv.serve(vids)
+    with health.guard("serve_rounds"):
+        srv.serve(vids)
     t_cold = time.perf_counter() - t0
     m = srv.metrics()
     print(f"cold:       {args.queries} queries in {t_cold:.3f}s "
@@ -103,13 +116,22 @@ def main():
               f"vertices in {t_warm_build:.3f}s")
         fp0 = srv.metrics()["fast_path_hits"]
         t0 = time.perf_counter()
-        srv.serve(vids)
+        with health.guard("serve_rounds"):
+            srv.serve(vids)
         t_warm = time.perf_counter() - t0
         m = srv.metrics()
         print(f"pre-warmed: {args.queries} queries in {t_warm:.3f}s "
               f"({args.queries/t_warm:.0f} q/s), "
               f"{m['fast_path_hits'] - fp0} fast-path answers -> "
               f"{t_cold/t_warm:.1f}x cold throughput")
+
+    hs = health.summary()
+    burn = hs["slo_burn"]
+    print(f"health:     {hs['windows']} rounds observed, slo burn="
+          f"{'n/a' if burn is None else f'{burn:.3f}'}, "
+          f"{len(hs['detections'])} detections")
+    for p in hs["flight_paths"]:
+        print(f"flight:     {p}")
 
     for path in obs.flush():
         print(f"wrote {path}")

@@ -53,6 +53,11 @@ def main():
                          "rounds (serve_round / serve_sample spans)")
     ap.add_argument("--metrics-out", default=None, metavar="PATH",
                     help="write the obs registry as JSONL")
+    ap.add_argument("--flight-dir", default=".", metavar="DIR",
+                    help="where the health plane dumps FLIGHT_*.json on a "
+                         "detection or an escaped exception")
+    ap.add_argument("--slo-p99-ms", type=float, default=None,
+                    help="arm the SLO-burn detector with this p99 target")
     args = ap.parse_args()
 
     os.environ.setdefault(
@@ -82,13 +87,26 @@ def main():
     cfg = small_gnn_config(args.model, batch_size=64, feat_dim=32,
                            num_classes=16, fanouts=(5, 10), hidden_size=64)
     params = init_model_params(jax.random.key(0), cfg)
+    # health plane: skew/drift over the serve-side halo series (expected
+    # distribution = the partitioning's per-rank halo counts), optional
+    # SLO burn, flight recorder on anomalies
+    health = obs.HealthPlane(
+        obs.HealthConfig(
+            flight_dir=args.flight_dir,
+            skew_metric="rank_serve_halo_rows",
+            hot_metric="rank_serve_hot_hits",
+            slo_p99_s=args.slo_p99_ms / 1e3
+            if args.slo_p99_ms is not None else None),
+        num_ranks=R,
+        expected_halo_rows=[p.num_halo for p in ps.parts])
     srv = DistGNNServeScheduler(
         cfg, params, ps, make_gnn_mesh(R),
         DistServeConfig(num_slots=args.slots, halo_slots=args.halo_slots,
                         cache=ServeCacheConfig(cache_size=args.cache_size,
                                                ways=8),
                         hot_size=args.hot_size, dedup=not args.no_dedup,
-                        round_batch=args.round_batch))
+                        round_batch=args.round_batch),
+        health=health)
     if srv.hot is not None:
         print(f"hot tier:   {srv.hot.num_slots} hub vertices replicated on "
               f"every shard; dedup={not args.no_dedup}, "
@@ -115,7 +133,8 @@ def main():
               f"across {R} shards in {time.perf_counter() - t0:.3f}s")
 
     t0 = time.perf_counter()
-    srv.serve(vids)
+    with health.guard("serve_rounds"):
+        srv.serve(vids)
     dt = time.perf_counter() - t0
     m = srv.metrics()
     print(f"serve:      {args.queries} queries in {dt:.3f}s "
@@ -138,13 +157,23 @@ def main():
     srv.cache.reset_counters()
     srv.reset_frontend()
     t0 = time.perf_counter()
-    srv.serve(vids)
+    with health.guard("serve_rounds"):
+        srv.serve(vids)
     dt2 = time.perf_counter() - t0
     m = srv.metrics()
     print(f"repeat:     {args.queries} queries in {dt2:.3f}s "
           f"({args.queries / dt2:.0f} q/s), {m['fast_path_hits']} fast-path, "
           f"cached-halo frac {m['cached_halo_frac']:.2f} -> "
           f"{dt / max(dt2, 1e-9):.1f}x first pass")
+
+    hs = health.summary()
+    fmt = lambda v, spec=".3f": "n/a" if v is None else f"{v:{spec}}"
+    print(f"health:     {hs['windows']} rounds observed, halo skew="
+          f"{fmt(hs['skew'], '.2f')}, edge-cut drift="
+          f"{fmt(hs['edge_cut_drift'])}, slo burn={fmt(hs['slo_burn'])}, "
+          f"{len(hs['detections'])} detections")
+    for p in hs["flight_paths"]:
+        print(f"flight:     {p}")
 
     for path in obs.flush():
         print(f"wrote {path}")

@@ -17,6 +17,17 @@ import os
 import time
 
 
+def _configure_obs(args):
+    """Shared --trace-out/--metrics-out plumbing: both the GNN and the LM
+    subcommands feed the same registry sink (and write the same artifact
+    formats) as the three GNN launchers."""
+    from repro import obs
+    obs.configure(obs.ObsConfig(
+        trace=args.trace_out is not None, trace_path=args.trace_out,
+        metrics_path=args.metrics_out))
+    return obs
+
+
 def run_gnn(args):
     import jax
     import numpy as np
@@ -27,6 +38,7 @@ def run_gnn(args):
     from repro.train import checkpoint
     from repro.train.gnn_trainer import DistTrainer, build_dist_data
 
+    obs = _configure_obs(args)
     if jax.device_count() < args.ranks:
         raise SystemExit(
             f"need {args.ranks} devices, have {jax.device_count()}; set "
@@ -50,8 +62,15 @@ def run_gnn(args):
                       delay=args.hec_delay))
     dd = build_dist_data(ps, cfg)
     mesh = make_gnn_mesh(args.ranks)
+    # cluster health plane: per-rank epoch series + skew/drift detectors
+    # over the partitioning's expected halo distribution; train_epochs
+    # dumps FLIGHT_*.json if a detector fires or the step loop dies
+    health = obs.HealthPlane(
+        obs.HealthConfig(flight_dir=args.flight_dir),
+        num_ranks=args.ranks,
+        expected_halo_rows=[p.num_halo for p in ps.parts])
     tr = DistTrainer(cfg=cfg, mesh=mesh, num_ranks=args.ranks,
-                     mode=args.mode)
+                     mode=args.mode, health=health)
     state = tr.init_state(jax.random.key(args.seed))
     t0 = time.time()
     state, hist = tr.train_epochs(ps, dd, state, args.epochs, log_every=1)
@@ -59,6 +78,15 @@ def run_gnn(args):
     acc = tr.evaluate(ps, dd, state)
     print(f"done: {args.epochs} epochs in {dt:.1f}s "
           f"({dt/args.epochs:.2f}s/epoch); test_acc={acc:.3f}")
+    hs = health.summary()
+    fmt = lambda v: "n/a" if v is None else f"{v:.3f}"
+    print(f"health: halo skew={fmt(hs['skew'])} "
+          f"edge-cut drift={fmt(hs['edge_cut_drift'])} "
+          f"detections={len(hs['detections'])}")
+    for p in hs["flight_paths"]:
+        print(f"flight: {p}")
+    for path in obs.flush():
+        print(f"wrote {path}")
     if args.ckpt:
         checkpoint.save(args.ckpt, state["params"], int(state["step"]))
         print("saved", args.ckpt)
@@ -72,6 +100,7 @@ def run_lm(args):
     from repro.train import lm_trainer
     from repro.train.optimizer import AdamConfig
 
+    obs = _configure_obs(args)
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -93,11 +122,15 @@ def run_lm(args):
             batch["frame_embeds"] = jax.random.normal(
                 k, (args.batch, cfg.num_frame_tokens, cfg.d_model)
             ).astype(jnp.bfloat16)
-        params, opt, metrics = step(params, opt, batch)
+        with obs.span("lm_step", step=i):
+            params, opt, metrics = step(params, opt, batch)
+        obs.count("lm_tokens", args.batch * args.seq, subsystem="lm")
         if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
             print(f"step {i}: loss={float(metrics['loss']):.4f} "
                   f"gnorm={float(metrics['grad_norm']):.3f}")
     print(f"{args.steps} steps in {time.time()-t0:.1f}s")
+    for path in obs.flush():
+        print(f"wrote {path}")
 
 
 def main():
@@ -126,6 +159,13 @@ def main():
     g.add_argument("--hec-ls", type=int, default=2)
     g.add_argument("--hec-delay", type=int, default=1)
     g.add_argument("--ckpt", default=None)
+    g.add_argument("--trace-out", default=None, metavar="PATH",
+                   help="write a Chrome trace-event JSON of the phase spans")
+    g.add_argument("--metrics-out", default=None, metavar="PATH",
+                   help="write the obs registry as JSONL")
+    g.add_argument("--flight-dir", default=".", metavar="DIR",
+                   help="where the health plane dumps FLIGHT_*.json on a "
+                        "detection or an escaped exception")
     g.set_defaults(fn=run_gnn)
 
     l = sub.add_parser("lm")
@@ -135,6 +175,11 @@ def main():
     l.add_argument("--batch", type=int, default=4)
     l.add_argument("--seq", type=int, default=128)
     l.add_argument("--lr", type=float, default=3e-4)
+    l.add_argument("--trace-out", default=None, metavar="PATH",
+                   help="write a Chrome trace-event JSON of the lm_step "
+                        "spans")
+    l.add_argument("--metrics-out", default=None, metavar="PATH",
+                   help="write the obs registry as JSONL")
     l.set_defaults(fn=run_lm)
 
     args = ap.parse_args()

@@ -18,7 +18,15 @@ One process-wide :class:`Observability` runtime (swap it with
   * the :class:`EpochBreakdown` / :class:`StepModel` report: per-epoch
     sample / host-prep / H2D / forward / AEP-push / backward shares and
     the overlap-efficiency figure (fraction of modeled push latency
-    hidden behind the backward pass).
+    hidden behind the backward pass),
+  * the **cluster health plane** (:mod:`repro.obs.cluster` /
+    :mod:`repro.obs.detect` / :mod:`repro.obs.sentinel`): per-rank
+    telemetry shards aggregated into rank-labeled series + skew/sum
+    cluster views, straggler / load-skew / edge-cut-drift / SLO-burn /
+    hot-tier-decay detectors, and the bounded flight recorder that dumps
+    ``FLIGHT_<reason>.json`` on a detection or an escaped exception
+    (:class:`HealthPlane`, wired via ``DistTrainer(health=...)`` and the
+    serve schedulers' ``health=`` argument).
 
 Instrumented code calls the module-level helpers::
 
@@ -41,8 +49,15 @@ from typing import List, Optional
 
 from repro.obs.breakdown import (EpochBreakdown, MEASURED_PHASES,  # noqa: F401
                                  REPORT_PHASES, StepModel)
+from repro.obs.cluster import (RankAccumulator, SeriesView,  # noqa: F401
+                               publish_rank_series, rank_series, skew_ratio)
+from repro.obs.detect import (Detection, EdgeCutDriftDetector,  # noqa: F401
+                              HotTierDecayDetector, LoadSkewDetector,
+                              SLOBurnDetector, StragglerDetector)
 from repro.obs.registry import (Counter, Gauge, Histogram,  # noqa: F401
                                 MetricsRegistry, hit_rate_metrics)
+from repro.obs.sentinel import (FlightRecorder, HealthConfig,  # noqa: F401
+                                HealthPlane)
 from repro.obs.tracing import Tracer, validate_chrome_trace  # noqa: F401
 
 

@@ -1,0 +1,143 @@
+"""Per-rank telemetry shards → cluster views.
+
+PR 6's registry is strictly per-process: every counter the trainer or
+the distributed serve scheduler publishes has already been ``psum``-ed
+over the mesh, so a straggling rank or a drifting edge-cut is invisible.
+This module adds the missing axis without touching the hot path:
+
+  * the shard_map step (trainer) / serve round (dist scheduler) return
+    their pre-``psum`` per-rank scalars as ONE extra sharded output — a
+    dict of ``[R]`` vectors read host-side with the metrics that are
+    already transferred every step, no new collectives;
+  * :class:`RankAccumulator` sums those vectors over an epoch/round
+    window on the host;
+  * :func:`publish_rank_series` writes the window totals into
+    rank-labeled registry series (``rank_halo_rows{rank=3}``) plus
+    cluster-view gauges (sum, max, mean, max/mean skew ratio) — the
+    sensor layer the streaming-re-partitioning and adaptive-hot-set
+    roadmap items read.
+
+Observability never feeds back into computation: the per-rank output is
+emitted by the compiled step unconditionally (the program is identical
+with the health plane on or off — bit-identity is pinned in
+``tests/test_health.py``), and only the host-side recording is gated.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.obs.registry import MetricsRegistry
+
+
+def skew_ratio(per_rank) -> Optional[float]:
+    """max/mean load-imbalance ratio; ``None`` when the mean is zero
+    (an idle window has no defined skew — never divide by a cold start)."""
+    a = np.asarray(per_rank, np.float64).reshape(-1)
+    if a.size == 0:
+        return None
+    mean = float(a.mean())
+    if mean <= 0.0:
+        return None
+    return float(a.max()) / mean
+
+
+@dataclasses.dataclass(frozen=True)
+class SeriesView:
+    """One metric's cluster view for a window: the per-rank breakdown
+    plus its sum / mean / max / skew aggregates."""
+    name: str
+    per_rank: np.ndarray            # [R] float64
+
+    @property
+    def sum(self) -> float:
+        return float(self.per_rank.sum())
+
+    @property
+    def mean(self) -> float:
+        return float(self.per_rank.mean()) if self.per_rank.size else 0.0
+
+    @property
+    def max(self) -> float:
+        return float(self.per_rank.max()) if self.per_rank.size else 0.0
+
+    @property
+    def skew(self) -> Optional[float]:
+        return skew_ratio(self.per_rank)
+
+
+class RankAccumulator:
+    """Host-side accumulator for per-step ``{name: [R]}`` counter shards.
+
+    ``add`` sums element-wise into the running window; ``finish`` returns
+    the window totals and resets.  Values arriving as jax arrays should
+    be converted with ``np.asarray`` by the caller (that conversion is
+    the "one host-side gather" — it rides the same device→host transfer
+    the step metrics already pay for)."""
+
+    def __init__(self, num_ranks: int):
+        self.num_ranks = int(num_ranks)
+        self.totals: Dict[str, np.ndarray] = {}
+        self.steps = 0
+
+    def add(self, stats: Dict[str, np.ndarray]):
+        for name, arr in stats.items():
+            a = np.asarray(arr, np.float64).reshape(-1)
+            if a.size != self.num_ranks:
+                raise ValueError(
+                    f"rank series {name!r} has {a.size} entries, "
+                    f"expected {self.num_ranks}")
+            t = self.totals.get(name)
+            self.totals[name] = a.copy() if t is None else t + a
+        self.steps += 1
+
+    def finish(self) -> Dict[str, np.ndarray]:
+        out, self.totals, self.steps = self.totals, {}, 0
+        return out
+
+
+def views_of(totals: Dict[str, np.ndarray]) -> Dict[str, SeriesView]:
+    return {name: SeriesView(name, np.asarray(arr, np.float64).reshape(-1))
+            for name, arr in totals.items()}
+
+
+def publish_rank_series(reg: MetricsRegistry,
+                        totals: Dict[str, np.ndarray],
+                        ) -> Dict[str, SeriesView]:
+    """Publish one window's per-rank totals into the registry.
+
+    For each metric ``m`` with per-rank vector ``v``:
+
+      * counters ``m{rank=r}`` accumulate ``v[r]`` (the rank-labeled
+        series — sums across windows like every other counter),
+      * gauges ``cluster_sum/cluster_mean/cluster_max{metric=m}`` carry
+        the window aggregates,
+      * gauge ``cluster_skew{metric=m}`` carries max/mean — set only when
+        defined (zero-mean windows publish no skew).
+
+    Returns the window's :class:`SeriesView`s for detector consumption.
+    """
+    views = views_of(totals)
+    for name in sorted(views):
+        v = views[name]
+        for r in range(v.per_rank.size):
+            reg.counter(name, rank=r).inc(v.per_rank[r])
+        reg.gauge("cluster_sum", metric=name).set(v.sum)
+        reg.gauge("cluster_mean", metric=name).set(v.mean)
+        reg.gauge("cluster_max", metric=name).set(v.max)
+        if v.skew is not None:
+            reg.gauge("cluster_skew", metric=name).set(v.skew)
+    return views
+
+
+def rank_series(reg: MetricsRegistry, name: str,
+                num_ranks: int) -> Optional[np.ndarray]:
+    """Read back the accumulated rank-labeled counter series as ``[R]``,
+    or ``None`` if no rank of it was ever published."""
+    vals = [reg.value(name, default=np.nan, rank=r) for r in range(num_ranks)]
+    a = np.asarray(vals, np.float64)
+    if np.isnan(a).all():
+        return None
+    return np.nan_to_num(a, nan=0.0)

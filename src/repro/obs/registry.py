@@ -28,6 +28,7 @@ shared by runtime metrics and ``BENCH_<suite>.json`` artifacts.
 from __future__ import annotations
 
 import json
+import re
 import threading
 from collections import deque
 from typing import Dict, Iterator, List, Optional, Tuple
@@ -196,6 +197,16 @@ class MetricsRegistry:
         d = self.value(den)
         return self.value(num) / d if d else default
 
+    def rate_or_none(self, num: str, den: str) -> Optional[float]:
+        """Like :meth:`rate` but ``None`` on a zero/absent denominator.
+
+        A cold-start window with zero lookups has no defined hit rate; the
+        health-plane detectors (and ``hit_rate_metrics``) treat that as
+        "no data" rather than 0.0, so a cache that simply has not been
+        exercised yet never reads as a 0% cache."""
+        d = self.value(den)
+        return self.value(num) / d if d else None
+
     def snapshot(self) -> dict:
         """Flat ``{key: value}`` view; histograms expand to their summary
         sub-keys (``<key>.p50`` etc.)."""
@@ -225,6 +236,48 @@ class MetricsRegistry:
                                        if k != "kind"}}) + "\n")
         return path
 
+    def to_prom_text(self) -> str:
+        """Prometheus text-exposition dump of every live instrument.
+
+        Counters/gauges map 1:1; histograms export as a ``summary`` with
+        exact window quantiles (``{quantile="0.5"|"0.99"}``) plus the
+        standard ``_sum`` (over the retained window) and ``_count``
+        (lifetime) series.  Label values are escaped per the exposition
+        format; instrument names are sanitised to the Prometheus charset
+        so registry keys like ``serve_latency_s{subsystem=serve}`` scrape
+        without bespoke JSON parsing."""
+        lines: List[str] = []
+        typed: set = set()
+
+        def head(name: str, kind: str):
+            if name not in typed:
+                typed.add(name)
+                lines.append(f"# TYPE {name} {kind}")
+
+        def fmt(value: float) -> str:
+            return repr(float(value))
+
+        for key, c in sorted(self._counters.items()):
+            name, labels = _parse_key(key)
+            head(name, "counter")
+            lines.append(f"{name}{_prom_labels(labels)} {fmt(c.value)}")
+        for key, g in sorted(self._gauges.items()):
+            name, labels = _parse_key(key)
+            head(name, "gauge")
+            lines.append(f"{name}{_prom_labels(labels)} {fmt(g.value)}")
+        for key, h in sorted(self._histograms.items()):
+            name, labels = _parse_key(key)
+            head(name, "summary")
+            for q in (50.0, 99.0):
+                ql = dict(labels)
+                ql["quantile"] = f"{q / 100:g}"
+                lines.append(
+                    f"{name}{_prom_labels(ql)} {fmt(h.percentile(q))}")
+            window_sum = float(np.sum(h.samples)) if h.samples else 0.0
+            lines.append(f"{name}_sum{_prom_labels(labels)} {fmt(window_sum)}")
+            lines.append(f"{name}_count{_prom_labels(labels)} {h.count}")
+        return "\n".join(lines) + "\n" if lines else ""
+
     def reset(self):
         with self._lock:
             self._counters.clear()
@@ -233,17 +286,47 @@ class MetricsRegistry:
             self.events.clear()
 
 
+def _parse_key(key: str) -> Tuple[str, Dict[str, str]]:
+    """Invert :func:`_key`: ``name{k=v,...}`` -> sanitised name + labels."""
+    name, _, rest = key.partition("{")
+    labels: Dict[str, str] = {}
+    if rest:
+        for item in rest[:-1].split(","):
+            k, _, v = item.partition("=")
+            labels[_prom_name(k)] = v
+    return _prom_name(name), labels
+
+
+def _prom_name(name: str) -> str:
+    name = re.sub(r"[^a-zA-Z0-9_:]", "_", name)
+    return f"_{name}" if not name or name[0].isdigit() else name
+
+
+def _prom_labels(labels: Dict[str, str]) -> str:
+    if not labels:
+        return ""
+    def esc(v: str) -> str:
+        return str(v).replace("\\", r"\\").replace('"', r"\"") \
+                     .replace("\n", r"\n")
+    inner = ",".join(f'{k}="{esc(v)}"' for k, v in sorted(labels.items()))
+    return "{" + inner + "}"
+
+
 def hit_rate_metrics(reg: MetricsRegistry) -> dict:
     """Derive per-layer cache hit rates from epoch-summed counters.
 
     For every layer ``l`` with a ``hec_hits_l{l}`` counter:
 
-      * ``hec_hit_rate_l{l}``  = sum(hits)  / sum(halos)   (0 when no halos)
+      * ``hec_hit_rate_l{l}``  = sum(hits)  / sum(halos)
       * ``hot_hit_rate_l{l}``  = sum(hot_hits) / sum(halos) — only when the
         hot tier recorded anything (``hot_hits_l{l}`` exists); hot-tier
         hits are a subset of the halo rows, so the rate shares the halo
         denominator and reads as "fraction of halo rows the replicated
         tier served locally".
+
+    Layers whose halo denominator is zero (cold start, or a window where
+    no halo row was ever requested) are OMITTED — an undefined rate must
+    not masquerade as a 0% cache (see :meth:`MetricsRegistry.rate_or_none`).
 
     This is the trainer's ``_epoch_mean`` aggregation, moved behind the
     registry so every hit-rate in the repo is derived one way."""
@@ -252,7 +335,10 @@ def hit_rate_metrics(reg: MetricsRegistry) -> dict:
         if not key.startswith("hec_hits_l"):
             continue
         l = key[len("hec_hits_l"):]
-        out[f"hec_hit_rate_l{l}"] = reg.rate(key, f"hec_halos_l{l}")
+        rate = reg.rate_or_none(key, f"hec_halos_l{l}")
+        if rate is None:
+            continue
+        out[f"hec_hit_rate_l{l}"] = rate
         if f"hot_hits_l{l}" in reg._counters:
             out[f"hot_hit_rate_l{l}"] = reg.rate(f"hot_hits_l{l}",
                                                  f"hec_halos_l{l}")

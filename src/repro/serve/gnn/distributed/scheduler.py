@@ -63,6 +63,7 @@ scheduler is bit-compatible with PR 4):
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import List, Optional, Sequence
 
 import jax
@@ -142,13 +143,20 @@ class DistGNNServeScheduler(ServeFrontend):
     """Sharded serving over a ``PartitionSet`` on a 1-D ``("data",)`` mesh."""
 
     def __init__(self, cfg, params, ps: PartitionSet, mesh,
-                 serve_cfg: Optional[DistServeConfig] = None):
+                 serve_cfg: Optional[DistServeConfig] = None,
+                 health: Optional["obs.HealthPlane"] = None):
         self.cfg = cfg
         self.scfg = serve_cfg or DistServeConfig()
         self.ps = ps
         self.mesh = mesh
         self.num_ranks = ps.num_parts
         self.params = params
+        # cluster health plane: per-round per-rank telemetry + detectors
+        # (load skew, edge-cut drift vs `num_halo`, SLO burn on the serve
+        # latency histogram, hot-tier decay).  Host-side only — the
+        # compiled serve step is identical with or without it.
+        self.health = health \
+            if (health is not None and health.enabled) else None
         self.data = build_serve_data(ps)
         self.cache = ShardedServingCache(serve_layer_dims(cfg), ps,
                                          self.scfg.cache)
@@ -439,6 +447,41 @@ class DistGNNServeScheduler(ServeFrontend):
         return out
 
     # -- internals -----------------------------------------------------------
+    def _record_rank_round(self, stats: dict, wall_s: float):
+        """Per-rank round telemetry: the serve step's sharded stats are
+        already on the host (the same transfer `_run_round` consumes), so
+        this is pure bookkeeping — rank-labeled registry series + cluster
+        views, and one health-plane window per round."""
+        reg = obs.get().registry
+        if not (reg.enabled or self.health):
+            return
+        dims = serve_layer_dims(self.cfg)
+        sum_layers = lambda a: a.sum(axis=1).astype(np.float64) \
+            if a.ndim == 2 and a.shape[1] else np.zeros(self.num_ranks)
+        fetched = stats["halo_fetched"]
+        # response payload: fetched rows carry the layer-k embedding + a
+        # 4-byte vid tag (the comm model's accounting)
+        bytes_per_rank = np.zeros(self.num_ranks)
+        for i in range(fetched.shape[1] if fetched.ndim == 2 else 0):
+            bytes_per_rank += fetched[:, i].astype(np.float64) \
+                * (dims[i] * 4 + 4)
+        totals = {
+            "rank_serve_lookups": sum_layers(stats["lookups"]),
+            "rank_serve_hits": sum_layers(stats["hits"]),
+            "rank_serve_halo_rows": sum_layers(stats["halo_seen"]),
+            "rank_serve_halo_local": sum_layers(stats["halo_local"]),
+            "rank_serve_halo_fetched": sum_layers(fetched),
+            "rank_serve_halo_requested": sum_layers(stats["halo_requested"]),
+            "rank_serve_halo_bytes": bytes_per_rank,
+            "rank_serve_hot_hits": sum_layers(stats["hot_hits"]),
+            "rank_serve_round_seconds": np.full(self.num_ranks, wall_s),
+        }
+        if reg.enabled:
+            obs.publish_rank_series(reg, totals)
+        if self.health:
+            self.health.observe_round(totals, wall_s=wall_s,
+                                      latency_hist=self.latency)
+
     def _split_fast_path(self, rank: int, wave):
         """Split a wave into (answerable-without-compute, needs-compute):
         output-cache-resident on the owner, or hot-tier-valid in the
@@ -494,6 +537,7 @@ class DistGNNServeScheduler(ServeFrontend):
         cfg = self.cfg
         NB = self.scfg.round_batch
         slots = self.scfg.num_slots
+        t_round0 = time.perf_counter()
         with obs.span("serve_round", rounds=NB):
             with obs.span("serve_sample", microbatch=self._mb_counter):
                 blocks = []
@@ -533,6 +577,7 @@ class DistGNNServeScheduler(ServeFrontend):
                 obs.count("hot_hits", n_hot)
                 self.hot.sync_host()
             self.steps_run += 1
+            self._record_rank_round(stats, time.perf_counter() - t_round0)
             for r, groups in enumerate(round_groups):
                 for i, (local, reqs) in enumerate(groups):
                     assert out_valid[r, i], \

@@ -160,12 +160,17 @@ class ServeFrontend:
 
 class GNNServeScheduler(ServeFrontend):
     def __init__(self, cfg, params, part: Partition,
-                 serve_cfg: Optional[GNNServeConfig] = None):
+                 serve_cfg: Optional[GNNServeConfig] = None,
+                 health: Optional["obs.HealthPlane"] = None):
         assert part.num_halo == 0, "serving is single-partition"
         self.cfg = cfg
         self.scfg = serve_cfg or GNNServeConfig()
         self.part = part
         self.params = params
+        # health plane (num_ranks=1 here): SLO-burn detection over the
+        # serve latency histogram + flight recording; pure host bookkeeping
+        self.health = health \
+            if (health is not None and health.enabled) else None
         self.features = jnp.asarray(part.features)
         self.cache = ServingCache(serve_layer_dims(cfg), part.num_solid,
                                   self.scfg.cache)
@@ -336,6 +341,7 @@ class GNNServeScheduler(ServeFrontend):
     def _run_microbatch(self, groups: List):
         """One compiled step over the groups' unique vids; every request
         in a group receives the same slot's answer (dedup scatter-back)."""
+        t_round0 = time.perf_counter()
         with obs.span("serve_round", slots=len(groups)):
             mb = self._sample([vid for vid, _ in groups])
             states = self.cache.states
@@ -358,3 +364,12 @@ class GNNServeScheduler(ServeFrontend):
                     f"requests {[q.rid for q in reqs]} (vid {vid}) not served"
                 for req in reqs:
                     self._finish(req, out[i], "compute")
+        if self.health:
+            wall = time.perf_counter() - t_round0
+            self.health.observe_round(
+                {"rank_serve_lookups":
+                     np.asarray([float(np.asarray(stats["lookups"]).sum())]),
+                 "rank_serve_hits":
+                     np.asarray([float(np.asarray(stats["hits"]).sum())]),
+                 "rank_serve_round_seconds": np.asarray([wall])},
+                wall_s=wall, latency_hist=self.latency)

@@ -30,6 +30,7 @@ synchronous reference path.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import List, Optional
@@ -163,6 +164,11 @@ class DistTrainer:
     use_kernel: bool = False
     overlap: bool = True        # aep: dispatch push before the backward pass
     engine: Optional[HaloExchangeEngine] = None
+    # cluster health plane (obs.HealthPlane): per-rank epoch aggregation,
+    # straggler/skew/drift detectors, flight-recorder dump when a detector
+    # fires or an exception escapes the step loop.  Host-side only — the
+    # compiled step is identical with or without it.
+    health: Optional["obs.HealthPlane"] = None
 
     def __post_init__(self):
         if self.engine is None:
@@ -356,6 +362,26 @@ class DistTrainer:
                 inflight, push_stats = self.engine.aep_push(
                     data, mb, captured, vid_o_nodes, num_solid, inflight,
                     seed, dims, dmax, me)
+        # per-rank telemetry shard: the pre-psum values, captured BEFORE the
+        # cross-rank reductions below and returned as one extra sharded
+        # output.  The host reads it with the metrics it already transfers
+        # every step — no new collectives — and the output is emitted
+        # unconditionally, so the compiled program (and the computed
+        # numerics) are identical with the health plane on or off.
+        rank_stats = {
+            "rank_examples": n_valid,
+            "rank_sample_rows": sum(m.sum() for m in mb["node_mask"]),
+            "rank_halo_rows": sum(t for _, t, _ in hits),
+            "rank_hec_hits": sum(h for h, _, _ in hits),
+        }
+        if hot:
+            rank_stats["rank_hot_hits"] = sum(c for _, _, c in hits)
+        if push_stats is not None:
+            rank_stats["rank_push_rows"] = push_stats["push_rows"]
+            rank_stats["rank_push_bytes"] = push_stats["push_bytes"]
+        rank_stats = {k: jnp.asarray(v, jnp.float32)
+                      for k, v in rank_stats.items()}
+
         # gradients and metrics are example-weighted across ranks, so ranks
         # padded with an empty seed batch (epoch-length imbalance) neither
         # dilute the update toward zero nor skew the numbers: the all-reduce
@@ -394,7 +420,8 @@ class DistTrainer:
 
         exp = lambda t: jax.tree_util.tree_map(lambda a: a[None], t)
         return (params, opt_state, [exp(h) for h in hec],
-                [exp(h) for h in hot], exp(inflight), metrics)
+                [exp(h) for h in hot], exp(inflight), exp(rank_stats),
+                metrics)
 
     # -- public API ----------------------------------------------------------
     def _resolve_pipeline(self, ps, seed0, pipeline):
@@ -425,7 +452,7 @@ class DistTrainer:
             in_specs=(repl, repl, [shard] * cfg.num_layers,
                       [shard] * hot_layers, shard, shard, shard, repl),
             out_specs=(repl, repl, [shard] * cfg.num_layers,
-                       [shard] * hot_layers, shard, repl))
+                       [shard] * hot_layers, shard, shard, repl))
         return jax.jit(smapped,
                        donate_argnums=(1, 2, 3, 4) if donate else ())
 
@@ -454,44 +481,80 @@ class DistTrainer:
         phases = ("sample", "host_prep", "stage", "step")
         phase_at = lambda: {p: reg.value("phase_seconds", phase=p)
                             for p in phases}
-        for ep in range(num_epochs):
-            if pipeline is not None:
-                mb_iter = pipeline.epoch_batches(ep)
-            else:
-                from repro.train.data import gnn_epoch_iterator
-                mb_iter = (mb for mb, _ in gnn_epoch_iterator(ps, cfg, rng))
-            ep_metrics = []
-            ph0, wall0 = phase_at(), time.perf_counter()
-            for mb in mb_iter:
-                # the span covers dispatch AND the blocking host transfer
-                # of the metrics — i.e. the device step's wall time as
-                # seen by the training loop
-                with obs.span("step", epoch=ep, step=step_idx):
-                    (state["params"], state["opt_state"], state["hec"],
-                     state["hot"], state["inflight"], metrics) = step_fn(
-                        state["params"], state["opt_state"], state["hec"],
-                        state["hot"], state["inflight"], dist_data, mb,
-                        jnp.uint32(step_idx))
-                    ep_metrics.append(
-                        {k_: float(v) for k_, v in metrics.items()})
-                step_idx += 1
-            mean = _epoch_mean(ep_metrics)
-            if reg.enabled:
-                # per-epoch phase seconds (sample/host_prep run on the
-                # prefetch workers, so an epoch is credited with whatever
-                # preparation completed during it — exact at depth 1);
-                # EpochBreakdown.from_history renders the paper table
-                ph1 = phase_at()
-                for p in phases:
-                    mean[f"t_{p}"] = ph1[p] - ph0[p]
-                mean["t_wall"] = time.perf_counter() - wall0
-            history.append(mean)
-            if log_every:
-                hl = [f"l{l}:{mean.get(f'hec_hits_l{l}', 0)/max(mean.get(f'hec_halos_l{l}',1),1):.2f}"
-                      for l in range(cfg.num_layers)]
-            if log_every and (ep % log_every == 0 or ep == num_epochs - 1):
-                print(f"[{self.mode}] epoch {ep}: loss={mean['loss']:.4f} "
-                      f"acc={mean['acc']:.3f} hit-rates {' '.join(hl)}")
+        # per-rank telemetry: the step's sharded rank_stats output is
+        # accumulated host-side per epoch, published as rank-labeled
+        # registry series + cluster views, and fed to the health-plane
+        # detectors.  Pure host bookkeeping — the step itself is identical
+        # whether anyone reads rank_stats or not.
+        health = self.health \
+            if (self.health is not None and self.health.enabled) else None
+        acc = obs.RankAccumulator(self.num_ranks) \
+            if (reg.enabled or health) else None
+        guard = health.guard("train_step_loop") if health \
+            else contextlib.nullcontext()
+        with guard:
+            for ep in range(num_epochs):
+                if pipeline is not None:
+                    mb_iter = pipeline.epoch_batches(ep)
+                else:
+                    from repro.train.data import gnn_epoch_iterator
+                    mb_iter = (mb for mb, _ in
+                               gnn_epoch_iterator(ps, cfg, rng))
+                ep_metrics = []
+                t_step_ep = 0.0
+                ph0, wall0 = phase_at(), time.perf_counter()
+                for mb in mb_iter:
+                    # the span covers dispatch AND the blocking host
+                    # transfer of the metrics — i.e. the device step's wall
+                    # time as seen by the training loop
+                    ts0 = time.perf_counter()
+                    with obs.span("step", epoch=ep, step=step_idx):
+                        (state["params"], state["opt_state"], state["hec"],
+                         state["hot"], state["inflight"], rank_stats,
+                         metrics) = step_fn(
+                            state["params"], state["opt_state"],
+                            state["hec"], state["hot"], state["inflight"],
+                            dist_data, mb, jnp.uint32(step_idx))
+                        ep_metrics.append(
+                            {k_: float(v) for k_, v in metrics.items()})
+                    t_step_ep += time.perf_counter() - ts0
+                    if acc is not None:
+                        acc.add(jax.tree_util.tree_map(np.asarray,
+                                                       rank_stats))
+                    step_idx += 1
+                mean = _epoch_mean(ep_metrics)
+                wall = time.perf_counter() - wall0
+                if reg.enabled:
+                    # per-epoch phase seconds (sample/host_prep run on the
+                    # prefetch workers, so an epoch is credited with
+                    # whatever preparation completed during it — exact at
+                    # depth 1); EpochBreakdown.from_history renders the
+                    # paper table
+                    ph1 = phase_at()
+                    for p in phases:
+                        mean[f"t_{p}"] = ph1[p] - ph0[p]
+                    mean["t_wall"] = wall
+                if acc is not None:
+                    totals = acc.finish()
+                    # in-process shard_map has ONE clock for the fused
+                    # program, so every rank is credited the same step
+                    # wall time; multi-host deployments feed real per-rank
+                    # timings here and the straggler detector bites
+                    totals["rank_step_seconds"] = np.full(
+                        self.num_ranks, t_step_ep, np.float64)
+                    if reg.enabled:
+                        obs.publish_rank_series(reg, totals)
+                    if health:
+                        health.observe_epoch(totals, wall_s=wall)
+                history.append(mean)
+                if log_every:
+                    hl = [f"l{l}:{mean.get(f'hec_hits_l{l}', 0)/max(mean.get(f'hec_halos_l{l}',1),1):.2f}"
+                          for l in range(cfg.num_layers)]
+                if log_every and (ep % log_every == 0
+                                  or ep == num_epochs - 1):
+                    print(f"[{self.mode}] epoch {ep}: "
+                          f"loss={mean['loss']:.4f} "
+                          f"acc={mean['acc']:.3f} hit-rates {' '.join(hl)}")
         state["step"] = jnp.asarray(step_idx, jnp.int32)
         return state, history
 
@@ -520,7 +583,7 @@ class DistTrainer:
             mb_iter = _legacy()
         accs, weights = [], []
         for k, mb in enumerate(mb_iter):
-            (_, _, _, _, _, metrics) = step_fn(
+            (_, _, _, _, _, _, metrics) = step_fn(
                 state["params"], state["opt_state"], state["hec"],
                 state["hot"], state["inflight"], dist_data, mb,
                 jnp.uint32(10_000 + k))

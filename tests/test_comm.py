@@ -312,6 +312,29 @@ def test_exchange_roundtrip_identity(plan_ps):
                                       p.halo_owner.astype(np.float32))
 
 
+def test_exchange_publishes_per_rank_series(plan_ps):
+    """The offline exchange publishes receiver-side rank series that
+    match the plan-time expectation exactly (exact exchange = zero
+    drift by construction)."""
+    from repro import obs
+    ps, plan = plan_ps
+    obs.configure()                           # fresh default registry
+    try:
+        engine = HaloExchangeEngine(ps.num_parts, plan=plan)
+        h_solid = [np.zeros((p.num_solid, 3), np.float32)
+                   for p in ps.parts]
+        engine.exchange_halos_host(h_solid)
+        reg = obs.get().registry
+        got = obs.rank_series(reg, "rank_exchange_rows", ps.num_parts)
+        np.testing.assert_array_equal(got, plan.expected_inbound_rows())
+        by = obs.rank_series(reg, "rank_exchange_bytes", ps.num_parts)
+        assert by.sum() == plan.exchange_bytes(dim=3)
+        drift = obs.EdgeCutDriftDetector(plan.expected_inbound_rows())
+        assert drift.update(0, got) == [] and drift.last_drift == 0.0
+    finally:
+        obs.configure()
+
+
 def test_compat_exchange_matches_engine(plan_ps):
     from repro.serve.gnn.distributed import exchange_halos
     ps, plan = plan_ps

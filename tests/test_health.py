@@ -1,0 +1,574 @@
+"""Cluster health plane tests: per-rank aggregation vs a numpy reference,
+detector firing on injected anomaly traces (and silence on clean ones),
+the bounded flight recorder, step-loop exception capture, the perf
+sentinel, and the bit-identity contract (training computes the same bits
+with the health plane off or on)."""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from benchmarks import sentinel as bench_sentinel
+from repro import obs
+from repro.comm.plan import build_exchange_plan
+from repro.configs.gnn import small_gnn_config
+from repro.graph import partition_graph, synthetic_graph
+from repro.train.gnn_trainer import DistTrainer, build_dist_data
+
+
+@pytest.fixture(autouse=True)
+def fresh_obs():
+    obs.configure()
+    yield
+    obs.configure()
+
+
+# -- per-rank aggregation ----------------------------------------------------
+def test_rank_accumulator_matches_numpy_reference():
+    """Satellite: 4-rank synthetic window sums match the plain-numpy
+    reference exactly, and the published registry series read back."""
+    R, steps = 4, 7
+    rng = np.random.default_rng(0)
+    shards = [{"rank_halo_rows": rng.integers(0, 100, R).astype(np.float64),
+               "rank_examples": rng.integers(1, 32, R).astype(np.float64)}
+              for _ in range(steps)]
+    acc = obs.RankAccumulator(R)
+    for s in shards:
+        acc.add(s)
+    totals = acc.finish()
+    for name in ("rank_halo_rows", "rank_examples"):
+        ref = np.sum([s[name] for s in shards], axis=0)
+        np.testing.assert_array_equal(totals[name], ref)
+    assert acc.totals == {} and acc.steps == 0   # finish resets the window
+
+    reg = obs.MetricsRegistry()
+    views = obs.publish_rank_series(reg, totals)
+    v = views["rank_halo_rows"]
+    ref = totals["rank_halo_rows"]
+    assert v.sum == ref.sum() and v.max == ref.max()
+    assert v.skew == pytest.approx(ref.max() / ref.mean())
+    for r in range(R):
+        assert reg.value("rank_halo_rows", rank=r) == ref[r]
+    assert reg.value("cluster_sum", metric="rank_halo_rows") == ref.sum()
+    assert reg.value("cluster_skew", metric="rank_halo_rows") == \
+        pytest.approx(ref.max() / ref.mean())
+    np.testing.assert_array_equal(
+        obs.rank_series(reg, "rank_halo_rows", R), ref)
+    assert obs.rank_series(reg, "never_published", R) is None
+    # counters accumulate across windows like any other counter
+    obs.publish_rank_series(reg, totals)
+    assert reg.value("rank_halo_rows", rank=0) == 2 * ref[0]
+
+
+def test_rank_accumulator_rejects_wrong_width():
+    acc = obs.RankAccumulator(4)
+    with pytest.raises(ValueError, match="expected 4"):
+        acc.add({"rank_halo_rows": np.zeros(3)})
+
+
+def test_expected_inbound_rows_is_offdiag_column_sum():
+    g = synthetic_graph(num_vertices=600, avg_degree=6, num_classes=4,
+                        feat_dim=8, seed=0)
+    ps = partition_graph(g, 4, seed=0)
+    plan = build_exchange_plan(ps, host_indices=False)
+    inbound = plan.expected_inbound_rows()
+    ref = plan.pair_rows.sum(axis=0) - np.diag(plan.pair_rows)
+    np.testing.assert_array_equal(inbound, ref)
+    assert inbound.sum() == plan.halo_rows_total
+    # the plan expectation matches the partitioner's halo replica counts
+    np.testing.assert_array_equal(inbound, plan.num_halo)
+
+
+# -- detectors ---------------------------------------------------------------
+def test_straggler_fires_on_injected_trace_and_only_once():
+    det = obs.StragglerDetector(k=2.0, window=3)
+    base = np.full(4, 0.1)
+    for ep in range(5):                       # clean: zero false positives
+        assert det.update(ep, base) == []
+    slow = base.copy()
+    slow[2] = 0.5                             # 5x median
+    assert det.update(5, slow) == []          # streak 1
+    assert det.update(6, slow) == []          # streak 2
+    fired = det.update(7, slow)               # rising edge at window=3
+    assert len(fired) == 1 and fired[0].rank == 2
+    assert fired[0].detector == "straggler"
+    assert fired[0].value == pytest.approx(5.0)
+    assert det.update(8, slow) == []          # sustained -> no re-fire
+    assert det.update(9, base) == []          # recovery resets the streak
+    for ep in range(10, 12):
+        assert det.update(ep, slow) == []
+    assert len(det.update(12, slow)) == 1     # re-degrade fires again
+
+
+def test_straggler_silent_on_no_data_windows():
+    det = obs.StragglerDetector(k=2.0, window=2)
+    slow = np.array([0.1, 0.1, 0.1, 0.9])
+    assert det.update(0, slow) == []
+    assert det.update(1, None) == []          # gap resets the streak
+    assert det.update(2, np.zeros(4)) == []   # idle window: zero median
+    assert det.update(3, slow) == []          # streak restarted at 1
+    assert len(det.update(4, slow)) == 1
+
+
+def test_load_skew_fires_on_sustained_imbalance():
+    det = obs.LoadSkewDetector(threshold=2.0, window=3)
+    for ep in range(5):
+        assert det.update(ep, np.array([100, 110, 90, 100])) == []
+    hot = np.array([1000, 10, 10, 10])        # skew ~3.9
+    assert det.update(5, hot) == []
+    assert det.update(6, hot) == []
+    fired = det.update(7, hot)
+    assert len(fired) == 1 and fired[0].detector == "load_skew"
+    assert fired[0].value == pytest.approx(1000 / 257.5)
+    assert det.update(8, np.zeros(4)) == []   # idle window: None, reset
+    assert det.last_skew is None
+
+
+def test_edge_cut_drift_fires_on_distribution_shift():
+    expected = np.array([100, 100, 100, 100])
+    det = obs.EdgeCutDriftDetector(expected, tolerance=0.25, window=3)
+    for ep in range(5):                       # matches plan + noise: silent
+        assert det.update(ep, np.array([105, 95, 102, 98])) == []
+        assert det.last_drift < 0.05
+    shifted = np.array([400, 0, 0, 0])        # TV = 0.75
+    assert det.update(5, shifted) == []
+    assert det.update(6, shifted) == []
+    fired = det.update(7, shifted)
+    assert len(fired) == 1
+    assert fired[0].value == pytest.approx(0.75)
+    # zero-sum expectation disables the detector entirely
+    assert obs.EdgeCutDriftDetector(np.zeros(4)).update(0, shifted) == []
+
+
+def test_slo_burn_fires_on_fat_tail_and_respects_min_samples():
+    det = obs.SLOBurnDetector(target_p99_s=0.1, burn_threshold=0.05,
+                              window=2, min_samples=20)
+    h = obs.Histogram(window=256)
+    for _ in range(50):
+        h.observe(0.01)
+    assert det.update(0, h) == [] and det.update(1, h) == []
+    assert det.last_burn == 0.0
+    for _ in range(10):                       # now ~17% of samples over SLO
+        h.observe(0.5)
+    assert det.update(2, h) == []             # streak 1
+    fired = det.update(3, h)                  # window=2 rising edge
+    assert len(fired) == 1 and fired[0].detector == "slo_burn"
+    assert fired[0].value == pytest.approx(10 / 60)
+    # too few samples: no signal, streak resets
+    tiny = obs.Histogram()
+    tiny.observe(9.9)
+    det2 = obs.SLOBurnDetector(0.1, window=1)
+    assert det2.update(0, tiny) == []
+    assert det2.last_burn is None
+
+
+def test_hot_tier_decay_fires_after_peak_collapse():
+    det = obs.HotTierDecayDetector(decay=0.5, window=3, min_peak=0.05)
+    for ep in range(4):                       # establish a 0.3 peak
+        assert det.update(ep, hot_hits=30, halo_rows=100) == []
+    assert det.peak == pytest.approx(0.3)
+    for ep in range(4, 6):
+        assert det.update(ep, hot_hits=5, halo_rows=100) == []
+    fired = det.update(6, hot_hits=5, halo_rows=100)
+    assert len(fired) == 1 and fired[0].detector == "hot_tier_decay"
+    assert fired[0].value == pytest.approx(0.05)
+    assert det.update(7, hot_hits=0, halo_rows=0) == []   # no traffic: reset
+    assert det.last_rate is None
+
+
+# -- flight recorder ---------------------------------------------------------
+def test_flight_recorder_bounded_and_dump_valid_json(tmp_path):
+    rec = obs.FlightRecorder(capacity=8)
+    for i in range(50):
+        rec.note("tick", i=i)
+    assert len(rec.entries) == 8              # ring buffer bounded
+    assert [e["i"] for e in rec.entries] == list(range(42, 50))
+    path = rec.dump("load_skew", str(tmp_path))
+    assert os.path.basename(path) == "FLIGHT_load_skew.json"
+    with open(path) as f:
+        d = json.load(f)                      # self-contained, valid JSON
+    assert d["reason"] == "load_skew"
+    assert d["num_entries"] == 8 and len(d["entries"]) == 8
+    assert all(e["kind"] == "tick" for e in d["entries"])
+    # same reason overwrites — a sustained anomaly is one file, not a flood
+    rec.note("tick", i=99)
+    assert rec.dump("load_skew", str(tmp_path)) == path
+    assert len(list(tmp_path.glob("FLIGHT_*.json"))) == 1
+    # hostile reasons become filesystem-safe slugs
+    p2 = rec.dump("../../etc: passwd?", str(tmp_path))
+    assert os.path.dirname(p2) == str(tmp_path)
+    assert ".." not in os.path.basename(p2)
+
+
+def test_flight_recorder_metric_delta_bounded():
+    reg = obs.MetricsRegistry()
+    rec = obs.FlightRecorder()
+    for i in range(100):
+        reg.counter(f"c{i}").inc(i + 1)
+    rec.record_metrics_delta(reg)
+    entry = rec.entries[-1]
+    assert entry["kind"] == "metrics_delta"
+    assert len(entry["changed"]) == 64 and entry["dropped"] == 36
+    rec.record_metrics_delta(reg)             # no movement -> no entry
+    assert rec.entries[-1] is entry
+
+
+# -- HealthPlane -------------------------------------------------------------
+def _totals(halo, step_s=None, hot=None):
+    t = {"rank_halo_rows": np.asarray(halo, np.float64)}
+    if step_s is not None:
+        t["rank_step_seconds"] = np.asarray(step_s, np.float64)
+    if hot is not None:
+        t["rank_hot_hits"] = np.asarray(hot, np.float64)
+    return t
+
+
+def test_health_plane_clean_run_no_detections(tmp_path):
+    hp = obs.HealthPlane(obs.HealthConfig(flight_dir=str(tmp_path)),
+                         num_ranks=4, expected_halo_rows=[100] * 4,
+                         registry=obs.MetricsRegistry())
+    for ep in range(10):                      # balanced + on-plan: silent
+        hp.observe_epoch(_totals([101, 99, 98, 102], step_s=[0.1] * 4))
+    s = hp.summary()
+    assert s["detections"] == [] and s["flight_paths"] == []
+    assert s["windows"] == 10
+    assert s["skew"] == pytest.approx(102 / 100.0)
+    assert s["edge_cut_drift"] < 0.05
+    assert not list(tmp_path.glob("FLIGHT_*.json"))
+
+
+def test_health_plane_detects_injected_drift_and_dumps(tmp_path):
+    reg = obs.MetricsRegistry()
+    hp = obs.HealthPlane(
+        obs.HealthConfig(flight_dir=str(tmp_path), drift_window=3,
+                         skew_threshold=10.0),
+        num_ranks=4, expected_halo_rows=[100] * 4, registry=reg)
+    for _ in range(3):
+        hp.observe_epoch(_totals([400, 0, 0, 0], step_s=[0.1] * 4))
+    dets = hp.summary()["detections"]
+    assert [d["detector"] for d in dets] == ["edge_cut_drift"]
+    assert reg.value("health_detections", detector="edge_cut_drift") == 1.0
+    assert reg.value("health_edge_cut_drift") == pytest.approx(0.75)
+    dump = tmp_path / "FLIGHT_edge_cut_drift.json"
+    assert dump.exists()
+    d = json.loads(dump.read_text())
+    assert d["detection"]["detector"] == "edge_cut_drift"
+    kinds = {e["kind"] for e in d["entries"]}
+    assert {"window", "detection"} <= kinds   # context rode along
+
+
+def test_health_plane_straggler_and_hot_decay_paths(tmp_path):
+    hp = obs.HealthPlane(
+        obs.HealthConfig(flight_dir=str(tmp_path), straggler_window=2,
+                         hot_window=2, dump_on_detection=False),
+        num_ranks=4, registry=obs.MetricsRegistry())
+    # hot tier healthy, rank 3 straggling
+    for ep in range(2):
+        hp.observe_epoch(_totals([100] * 4, step_s=[0.1, 0.1, 0.1, 0.9],
+                                 hot=[10] * 4))
+    dets = hp.summary()["detections"]
+    assert [d["detector"] for d in dets] == ["straggler"]
+    assert dets[0]["rank"] == 3
+    assert hp.summary()["flight_paths"] == []        # dumps disabled
+    # hot-tier collapse after the peak
+    for ep in range(2):
+        hp.observe_epoch(_totals([100] * 4, step_s=[0.1] * 4,
+                                 hot=[1, 1, 1, 1]))
+    assert "hot_tier_decay" in [d["detector"]
+                                for d in hp.summary()["detections"]]
+
+
+def test_health_plane_guard_dumps_on_exception(tmp_path):
+    hp = obs.HealthPlane(obs.HealthConfig(flight_dir=str(tmp_path)),
+                         num_ranks=2, registry=obs.MetricsRegistry())
+    hp.observe_epoch(_totals([5, 5]))
+    with pytest.raises(RuntimeError, match="boom"):
+        with hp.guard("unit_loop"):
+            raise RuntimeError("boom")
+    dump = tmp_path / "FLIGHT_exception_unit_loop.json"
+    assert dump.exists()
+    d = json.loads(dump.read_text())
+    assert d["exception"]["type"] == "RuntimeError"
+    assert "boom" in d["exception"]["repr"]
+    assert "RuntimeError" in d["exception"]["traceback"]
+    assert any(e["kind"] == "window" for e in d["entries"])
+
+
+def test_disabled_health_plane_is_inert(tmp_path):
+    hp = obs.HealthPlane(obs.HealthConfig(enabled=False,
+                                          flight_dir=str(tmp_path)),
+                         num_ranks=4, registry=obs.MetricsRegistry())
+    assert hp.observe_epoch(_totals([400, 0, 0, 0])) == []
+    with pytest.raises(ValueError):
+        with hp.guard("off"):
+            raise ValueError("x")
+    assert not list(tmp_path.glob("FLIGHT_*.json"))
+
+
+# -- trainer integration -----------------------------------------------------
+@pytest.fixture(scope="module")
+def tiny_setup():
+    g = synthetic_graph(num_vertices=400, avg_degree=5, num_classes=4,
+                        feat_dim=8, seed=0)
+    ps = partition_graph(g, 1, seed=0)
+    cfg = small_gnn_config("graphsage", batch_size=16, feat_dim=8,
+                           num_classes=4, fanouts=(3, 3), hidden_size=16)
+    mesh = jax.make_mesh((1,), ("data",))
+    dd = build_dist_data(ps, cfg)
+    return ps, cfg, mesh, dd
+
+
+def test_train_bit_identical_with_health_plane_on_off(tiny_setup, tmp_path):
+    """Acceptance: the health plane is pure host-side observation — same
+    training bits with it off or on, and per-rank series get published."""
+    ps, cfg, mesh, dd = tiny_setup
+
+    def run(health):
+        tr = DistTrainer(cfg=cfg, mesh=mesh, num_ranks=1, mode="aep",
+                         health=health)
+        state = tr.init_state(jax.random.key(0))
+        _, hist = tr.train_epochs(ps, dd, state, 2)
+        return hist
+
+    h_off = run(None)
+    hp = obs.HealthPlane(obs.HealthConfig(flight_dir=str(tmp_path)),
+                         num_ranks=1,
+                         expected_halo_rows=[p.num_halo for p in ps.parts])
+    h_on = run(hp)
+    for a, b in zip(h_off, h_on):
+        assert a["loss"] == b["loss"] and a["acc"] == b["acc"]
+        assert a["grad_norm"] == b["grad_norm"]
+    assert hp.summary()["windows"] == 2
+    assert hp.summary()["detections"] == []   # clean run: zero detections
+    assert not list(tmp_path.glob("FLIGHT_*.json"))
+    # the per-rank series flowed into the process registry
+    reg = obs.get().registry
+    ser = obs.rank_series(reg, "rank_examples", 1)
+    assert ser is not None and ser[0] > 0
+    assert reg.value("cluster_skew", metric="rank_examples") == 1.0
+
+
+def test_train_step_loop_exception_produces_flight_dump(tiny_setup,
+                                                        tmp_path):
+    """Acceptance: an exception escaping the step loop leaves a valid
+    FLIGHT_*.json behind (and still propagates)."""
+    ps, cfg, mesh, dd = tiny_setup
+    hp = obs.HealthPlane(obs.HealthConfig(flight_dir=str(tmp_path)),
+                         num_ranks=1)
+    tr = DistTrainer(cfg=cfg, mesh=mesh, num_ranks=1, mode="aep",
+                     health=hp)
+    state = tr.init_state(jax.random.key(0))
+
+    def exploding_step(*a, **k):
+        raise RuntimeError("injected step failure")
+
+    with pytest.raises(RuntimeError, match="injected step failure"):
+        tr.train_epochs(ps, dd, state, 1, step_fn=exploding_step)
+    dump = tmp_path / "FLIGHT_exception_train_step_loop.json"
+    assert dump.exists()
+    d = json.loads(dump.read_text())
+    assert d["exception"]["type"] == "RuntimeError"
+    assert "injected step failure" in d["exception"]["traceback"]
+
+
+# -- multi-rank end-to-end ---------------------------------------------------
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import jax
+import numpy as np
+from repro import obs
+from repro.configs.gnn import small_gnn_config
+from repro.graph import partition_graph, synthetic_graph
+from repro.launch.mesh import make_gnn_mesh
+from repro.train.gnn_trainer import DistTrainer, build_dist_data
+
+g = synthetic_graph(num_vertices=2000, avg_degree=8, num_classes=6,
+                    feat_dim=16, seed=0)
+ps = partition_graph(g, 4, seed=0)
+cfg = small_gnn_config("graphsage", batch_size=32, feat_dim=16,
+                       num_classes=6)
+dd = build_dist_data(ps, cfg)
+hp = obs.HealthPlane(obs.HealthConfig(flight_dir="."), num_ranks=4,
+                     expected_halo_rows=[p.num_halo for p in ps.parts])
+tr = DistTrainer(cfg=cfg, mesh=make_gnn_mesh(4), num_ranks=4, mode="aep",
+                 health=hp)
+state = tr.init_state(jax.random.key(0))
+state, hist = tr.train_epochs(ps, dd, state, 2)
+reg = obs.get().registry
+# history counters are per-step MEANS; scale by steps/epoch (uniform
+# across epochs — same pipeline schedule) to recover run totals
+spe = reg.value("phase_calls", phase="step") / len(hist)
+out = {
+    "examples_rank": list(obs.rank_series(reg, "rank_examples", 4)),
+    "halo_rank": list(obs.rank_series(reg, "rank_halo_rows", 4)),
+    "hec_rank": list(obs.rank_series(reg, "rank_hec_hits", 4)),
+    "examples_total": sum(h["examples"] for h in hist),
+    "hec_hits_total": sum(h["hec_hits_l0"] + h["hec_hits_l1"]
+                          for h in hist) * spe,
+    "halo_total": sum(h["hec_halos_l0"] + h["hec_halos_l1"]
+                      for h in hist) * spe,
+    "skew_gauge": reg.value("cluster_skew", metric="rank_halo_rows"),
+    "detections": [d.to_json() for d in hp.detections],
+    "flights": sorted(os.path.basename(p) for p in hp.flight_paths),
+}
+print("RESULT" + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def four_rank():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    proc = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT")][-1]
+    return json.loads(line[len("RESULT"):])
+
+
+def test_four_rank_series_sum_to_cluster_metrics(four_rank):
+    """Acceptance: the per-rank shards are the pre-psum addends of the
+    cluster metrics the trainer already reports — their sums agree."""
+    r = four_rank
+    assert len(r["halo_rank"]) == 4
+    # HEC hits: psum'ed per-layer counters vs per-rank series, same bits
+    assert sum(r["hec_rank"]) == pytest.approx(r["hec_hits_total"])
+    assert sum(r["halo_rank"]) == pytest.approx(r["halo_total"])
+    assert sum(r["examples_rank"]) == pytest.approx(r["examples_total"])
+    assert all(v >= 0 for v in r["examples_rank"])
+    assert sum(r["examples_rank"]) > 0
+
+
+def test_four_rank_clean_run_has_zero_false_positives(four_rank):
+    """Acceptance: balanced synthetic partitions + a live health plane
+    produce NO detections and NO flight dumps."""
+    assert four_rank["detections"] == []
+    assert four_rank["flights"] == []
+    assert four_rank["skew_gauge"] < 4.0      # balanced partitions
+
+
+# -- sentinel ----------------------------------------------------------------
+def _write_bench(dirpath, suite, rows, result=None):
+    rec = {"suite": suite,
+           "rows": [{"name": n, "us_per_call": us, "derived": ""}
+                    for n, us in rows.items()],
+           "result": result}
+    p = os.path.join(str(dirpath), f"BENCH_{suite}.json")
+    with open(p, "w") as f:
+        json.dump(rec, f)
+    return p
+
+
+def test_sentinel_bootstrap_then_pass(tmp_path, capsys):
+    cur = tmp_path / "run1"
+    cur.mkdir()
+    _write_bench(cur, "comm", {"exchange": 1000.0},
+                 result={"push_us": 500.0, "rows": 123})
+    base = tmp_path / "baseline.json"
+    assert bench_sentinel.main(["--current", str(cur),
+                                "--baseline", str(base),
+                                "--bootstrap"]) == 0
+    d = json.loads(base.read_text())
+    assert d["schema"] == bench_sentinel.SCHEMA_VERSION
+    assert d["suites"]["comm"]["rows"]["exchange"] == 1000.0
+    assert d["suites"]["comm"]["result"]["push_us"] == 500.0
+    assert "rows" not in d["suites"]["comm"]["result"]   # not a timing key
+    # identical run passes
+    assert bench_sentinel.main(["--current", str(cur),
+                                "--baseline", str(base)]) == 0
+    # noise within the factor passes
+    _write_bench(cur, "comm", {"exchange": 2500.0},
+                 result={"push_us": 900.0, "rows": 123})
+    assert bench_sentinel.main(["--current", str(cur),
+                                "--baseline", str(base)]) == 0
+    capsys.readouterr()
+
+
+def test_sentinel_flags_regression_and_missing_rows(tmp_path, capsys):
+    cur = tmp_path / "run1"
+    cur.mkdir()
+    _write_bench(cur, "comm", {"exchange": 1000.0},
+                 result={"push_us": 500.0})
+    base = tmp_path / "baseline.json"
+    bench_sentinel.main(["--current", str(cur), "--baseline", str(base),
+                         "--bootstrap"])
+    # 10x the 4x threshold -> regression, exit 1
+    _write_bench(cur, "comm", {"exchange": 10_000.0},
+                 result={"push_us": 500.0})
+    assert bench_sentinel.main(["--current", str(cur),
+                                "--baseline", str(base)]) == 1
+    assert "REGRESSION" in capsys.readouterr().err
+    # a vanished measurement is also a regression (coverage loss)
+    _write_bench(cur, "comm", {}, result={"push_us": 500.0})
+    assert bench_sentinel.main(["--current", str(cur),
+                                "--baseline", str(base)]) == 1
+    # a vanished suite too
+    os.remove(os.path.join(str(cur), "BENCH_comm.json"))
+    _write_bench(cur, "other", {"x": 1.0})
+    assert bench_sentinel.main(["--current", str(cur),
+                                "--baseline", str(base)]) == 1
+    capsys.readouterr()
+
+
+def test_sentinel_noise_floor_and_new_rows(tmp_path, capsys):
+    cur = tmp_path / "run1"
+    cur.mkdir()
+    _write_bench(cur, "hec", {"tiny": 1.0})
+    base = tmp_path / "baseline.json"
+    bench_sentinel.main(["--current", str(cur), "--baseline", str(base),
+                         "--bootstrap"])
+    # 1us -> 700us would be 700x, but it's under 4 * max(1, 200)us floor
+    _write_bench(cur, "hec", {"tiny": 700.0, "brand_new": 5.0})
+    assert bench_sentinel.main(["--current", str(cur),
+                                "--baseline", str(base)]) == 0
+    out = capsys.readouterr().out
+    assert "brand_new" in out and "re-bootstrap" in out
+    # ...and over the floor it fails
+    _write_bench(cur, "hec", {"tiny": 900.0})
+    assert bench_sentinel.main(["--current", str(cur),
+                                "--baseline", str(base)]) == 1
+    capsys.readouterr()
+
+
+def test_sentinel_validates_obs_trace(tmp_path, capsys):
+    cur = tmp_path / "run1"
+    cur.mkdir()
+    _write_bench(cur, "obs", {"epoch": 1000.0})
+    base = tmp_path / "baseline.json"
+    bench_sentinel.main(["--current", str(cur), "--baseline", str(base),
+                         "--bootstrap"])
+    # a trace missing required phase spans fails the sentinel
+    trace = {"traceEvents": [
+        {"name": "step", "ph": "X", "pid": 1, "tid": 1, "ts": 0, "dur": 5}]}
+    (cur / "TRACE_obs.json").write_text(json.dumps(trace))
+    assert bench_sentinel.main(["--current", str(cur),
+                                "--baseline", str(base)]) == 1
+    assert "required phase spans missing" in capsys.readouterr().err
+    # with all phases present it passes
+    evs = [{"name": n, "ph": "X", "pid": 1, "tid": 1, "ts": i, "dur": 1}
+           for i, n in enumerate(["sample", "host_prep", "stage", "step"])]
+    (cur / "TRACE_obs.json").write_text(json.dumps({"traceEvents": evs}))
+    assert bench_sentinel.main(["--current", str(cur),
+                                "--baseline", str(base)]) == 0
+    capsys.readouterr()
+
+
+def test_committed_smoke_baseline_is_loadable():
+    """The repo ships an armed baseline; keep it schema-valid."""
+    path = os.path.join(os.path.dirname(__file__), "..", "benchmarks",
+                        "baselines", "smoke.json")
+    with open(path) as f:
+        d = json.load(f)
+    assert d["schema"] == bench_sentinel.SCHEMA_VERSION
+    assert d["suites"], "baseline must cover at least one suite"
+    n = sum(len(s.get("rows", {})) + len(s.get("result", {}))
+            for s in d["suites"].values())
+    assert n > 0

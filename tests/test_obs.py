@@ -100,12 +100,82 @@ def test_hit_rate_metrics_sum_ratio_and_hot():
         reg.counter("hec_halos_l0").inc(halos)
         reg.counter("hot_hits_l0").inc(hot)
     reg.counter("hec_hits_l1").inc(4)
-    reg.counter("hec_halos_l1").inc(0)      # no halos -> rate 0, not NaN
+    reg.counter("hec_halos_l1").inc(0)      # no halos -> no rate at all
     out = obs.hit_rate_metrics(reg)
     assert out["hec_hit_rate_l0"] == 0.5    # 10/20, NOT mean(0.1, 0.9)
     assert out["hot_hit_rate_l0"] == 0.2    # 4/20
-    assert out["hec_hit_rate_l1"] == 0.0
+    assert "hec_hit_rate_l1" not in out     # zero-denominator window
     assert "hot_hit_rate_l1" not in out     # tier never recorded there
+
+
+def test_zero_denominator_rates_absent_not_nan():
+    """Satellite: cold-start windows (zero denominator) must yield absent
+    rates — never NaN and never ZeroDivisionError."""
+    reg = obs.MetricsRegistry()
+    # completely cold registry: no counters at all
+    assert obs.hit_rate_metrics(reg) == {}
+    assert reg.rate_or_none("hec_hits_l0", "hec_halos_l0") is None
+    # denominator recorded but zero
+    reg.counter("hec_halos_l0").inc(0)
+    reg.counter("hec_hits_l0").inc(0)
+    reg.counter("hot_hits_l0").inc(0)
+    out = obs.hit_rate_metrics(reg)
+    assert out == {}
+    assert reg.rate_or_none("hec_hits_l0", "hec_halos_l0") is None
+    # the plain rate() keeps its 0.0-on-zero contract for epoch means
+    assert reg.rate("hec_hits_l0", "hec_halos_l0") == 0.0
+    # detector-side guard: skew of an all-zero window is None, not NaN
+    assert obs.skew_ratio(np.zeros(4)) is None
+    assert obs.skew_ratio(np.array([])) is None
+    # once halos flow, the rate appears
+    reg.counter("hec_halos_l0").inc(10)
+    reg.counter("hec_hits_l0").inc(5)
+    out = obs.hit_rate_metrics(reg)
+    assert out["hec_hit_rate_l0"] == 0.5
+    assert out["hot_hit_rate_l0"] == 0.0
+
+
+def test_prometheus_text_exposition():
+    """Satellite: ``to_prom_text`` renders the registry in the Prometheus
+    text format — TYPE lines, sanitized names, escaped label values,
+    histogram quantile/sum/count series."""
+    reg = obs.MetricsRegistry()
+    reg.counter("halo_rows", rank=0).inc(5)
+    reg.counter("halo_rows", rank=1).inc(7)
+    reg.counter("bad-name.metric").inc(1)    # needs sanitizing
+    reg.gauge("cluster_skew", metric="halo_rows").set(1.4)
+    h = reg.histogram("serve_latency_s", subsystem="serve")
+    for v in [1.0, 2.0, 3.0, 4.0]:
+        h.observe(v)
+    text = reg.to_prom_text()
+    lines = text.splitlines()
+    assert text.endswith("\n")
+    assert "# TYPE halo_rows counter" in lines
+    assert 'halo_rows{rank="0"} 5.0' in lines
+    assert 'halo_rows{rank="1"} 7.0' in lines
+    assert "# TYPE bad_name_metric counter" in lines
+    assert "# TYPE cluster_skew gauge" in lines
+    assert 'cluster_skew{metric="halo_rows"} 1.4' in lines
+    assert "# TYPE serve_latency_s summary" in lines
+    assert ('serve_latency_s{quantile="0.5",subsystem="serve"} 2.5'
+            in lines)
+    assert 'serve_latency_s_count{subsystem="serve"} 4' in lines
+    assert 'serve_latency_s_sum{subsystem="serve"} 10.0' in lines
+    # each TYPE is declared exactly once per metric family
+    type_lines = [l for l in lines if l.startswith("# TYPE halo_rows ")]
+    assert len(type_lines) == 1
+    # every sample line parses as `name{labels} value` with a float value
+    for l in lines:
+        if not l or l.startswith("#"):
+            continue
+        float(l.rsplit(" ", 1)[1])
+    # label values with quotes/backslashes/newlines are escaped
+    reg2 = obs.MetricsRegistry()
+    reg2.counter("c", path='a"b\\c\nd').inc(1)
+    out = reg2.to_prom_text()
+    assert 'path="a\\"b\\\\c\\nd"' in out
+    # disabled registry exposes nothing
+    assert obs.MetricsRegistry(enabled=False).to_prom_text() == ""
 
 
 def test_epoch_mean_derives_hot_hit_rate():

@@ -168,7 +168,7 @@ def test_empty_padded_batch_step_is_finite():
     step_fn = tr.make_step(dd, donate=False)
     plan = SamplingPlan(ps=ps1, cfg=cfg, base_seed=0)
     mb = jax.device_put(plan.sample_host(0, 0, [np.empty(0, np.int64)]))
-    params, _, _, _, _, metrics = step_fn(
+    params, _, _, _, _, _, metrics = step_fn(
         state["params"], state["opt_state"], state["hec"], state["hot"],
         state["inflight"], dd, mb, np.uint32(0))
     assert float(metrics["examples"]) == 0
