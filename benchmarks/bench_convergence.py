@@ -11,6 +11,7 @@ import os
 import subprocess
 import sys
 
+from benchmarks import common
 from benchmarks.common import emit
 
 _SCRIPT = r"""
@@ -20,24 +21,34 @@ EP = int(sys.argv[2]) if len(sys.argv) > 2 else 10
 V = int(sys.argv[3]) if len(sys.argv) > 3 else 6000
 os.environ["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={R}"
 import jax, numpy as np
+from repro import obs
 from repro.configs.gnn import small_gnn_config
 from repro.graph import partition_graph, synthetic_graph
 from repro.launch.mesh import make_gnn_mesh
 from repro.train.gnn_trainer import DistTrainer, build_dist_data
 
+obs.configure(obs.ObsConfig())
 g = synthetic_graph(num_vertices=V, avg_degree=8, num_classes=6,
                     feat_dim=32, seed=0)
 ps = partition_graph(g, R, seed=0)
 cfg = small_gnn_config("graphsage", batch_size=64, feat_dim=32, num_classes=6)
 dd = build_dist_data(ps, cfg)
-tr = DistTrainer(cfg=cfg, mesh=make_gnn_mesh(R), num_ranks=R, mode="aep")
+# quality plane: the per-epoch loss/train-acc/grad-norm series flows into
+# the registry event log; eval accuracy joins it as "eval" events, and the
+# RESULT series is read back OUT of the event log (one sink, one ordering)
+quality = obs.QualityPlane()
+tr = DistTrainer(cfg=cfg, mesh=make_gnn_mesh(R), num_ranks=R, mode="aep",
+                 quality=quality)
 state = tr.init_state(jax.random.key(0))
 step = tr.make_step()
-accs = []
+reg = obs.get().registry
 for ep in range(EP):
     state, hist = tr.train_epochs(ps, dd, state, 1, step_fn=step)
-    accs.append(tr.evaluate(ps, dd, state, num_batches=4))
-print("RESULT" + json.dumps({"accs": accs}))
+    reg.log_event("eval", epoch=ep,
+                  acc=float(tr.evaluate(ps, dd, state, num_batches=4)))
+accs = [ev["acc"] for ev in reg.events_of("eval")]
+losses = [ev["loss"] for ev in reg.events_of("convergence") if "loss" in ev]
+print("RESULT" + json.dumps({"accs": accs, "losses": losses}))
 """
 
 
@@ -55,13 +66,20 @@ def run(r, epochs=10, vertices=6000):
 
 def main(smoke=False):
     if smoke:
-        accs = run(1, epochs=2, vertices=1500)["accs"]
+        r = run(1, epochs=2, vertices=1500)
+        accs = r["accs"]
+        for i, a in enumerate(accs):
+            emit(f"table3_acc_ep{i}", 0.0, f"acc={a:.3f}")
         emit("table3_convergence_smoke", 0.0,
              f"best_acc={max(accs):.3f};epochs={len(accs)}")
+        common.result({"accs": accs, "losses": r["losses"]})
         return
     single = run(1)["accs"]
     target = max(single)
-    dist = run(4)["accs"]
+    r4 = run(4)
+    dist = r4["accs"]
+    for i, a in enumerate(dist):
+        emit(f"table3_acc_ep{i}", 0.0, f"acc_4rank={a:.3f}")
 
     def epochs_to(accs, tgt):
         for i, a in enumerate(accs):
@@ -74,6 +92,8 @@ def main(smoke=False):
     emit("table3_convergence_4rank", 0.0,
          f"best_acc={max(dist):.3f};epochs_to_target={epochs_to(dist, target)};"
          f"parity={'yes' if max(dist) >= target - 0.01 else 'no'}")
+    common.result({"single_accs": single, "dist_accs": dist,
+                   "dist_losses": r4["losses"], "target_acc": target})
 
 
 if __name__ == "__main__":

@@ -13,6 +13,7 @@ Prints ``name,us_per_call,derived`` CSV lines.
   gnn_serve_dist bench_gnn_serve_dist sharded serving: shard scaling + halo cache
   roofline                   dry-run roofline table (deliverable g)
   obs    bench_obs          tracing overhead gate (<10%) + TRACE_obs.json
+  quality bench_quality     staleness sweep: epoch time vs accuracy vs audit err
 
 ``--smoke`` runs every registered benchmark at tiny scale (a CI bit-rot
 guard: each suite must still execute end-to-end, numbers are meaningless —
@@ -45,8 +46,8 @@ def main() -> None:
     common.set_out_dir(args.out_dir)
     from benchmarks import (bench_comm, bench_convergence, bench_distdgl,
                             bench_gnn_serve, bench_gnn_serve_dist, bench_hec,
-                            bench_obs, bench_pipeline, bench_scaling,
-                            bench_update, roofline)
+                            bench_obs, bench_pipeline, bench_quality,
+                            bench_scaling, bench_update, roofline)
     suites = {
         "fig2_update": bench_update.main,
         "fig3_fig4_scaling": bench_scaling.main,
@@ -59,6 +60,7 @@ def main() -> None:
         "gnn_serve_dist": bench_gnn_serve_dist.main,
         "roofline": roofline.main,
         "obs": bench_obs.main,
+        "quality": bench_quality.main,
     }
     print("name,us_per_call,derived")
     try:

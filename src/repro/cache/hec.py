@@ -164,6 +164,30 @@ def hec_occupancy(state: HECState) -> jnp.ndarray:
 
 
 # ---------------------------------------------------------------------------
+# host-side introspection (the quality plane's read surface)
+# ---------------------------------------------------------------------------
+def hec_valid_ages(state: HECState) -> np.ndarray:
+    """Ages of the tagged (valid) lines, flattened host-side — a stacked
+    ``[R, ...]`` state flattens across ranks.  One device read; never
+    mutates the cache (staleness telemetry, see
+    :mod:`repro.obs.quality`)."""
+    from repro.obs.quality import valid_ages
+    return valid_ages(state)
+
+
+def hec_entries(state: HECState, sample: Optional[int] = None,
+                rng: Optional[np.random.Generator] = None):
+    """Host-side ``(vids, values, ages)`` of the valid cache lines.
+
+    Stacked states flatten across the rank axis — each rank's replica of
+    a vid is its own auditable entry.  ``sample`` caps the count
+    (uniform without replacement via ``rng``) so the exactness audit
+    reads K lines, not the whole cache."""
+    from repro.obs.quality import cache_entries
+    return cache_entries(state, sample=sample, rng=rng)
+
+
+# ---------------------------------------------------------------------------
 # the unified cache object (per-layer states + host mirror + metrics)
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
@@ -363,6 +387,13 @@ class EmbeddingCache:
 
     def occupancy(self) -> List[float]:
         return [float(hec_occupancy(st)) for st in self.states]
+
+    def cached_entries(self, layer: int, sample: Optional[int] = None,
+                       rng: Optional[np.random.Generator] = None):
+        """``(vids, values, ages)`` of layer ``layer``'s valid lines —
+        the exactness audit's sampling hook (host-side read; vids are in
+        this cache's tag space: VID_o when stacked, local otherwise)."""
+        return hec_entries(self.states[layer], sample=sample, rng=rng)
 
     def metrics(self) -> dict:
         out = {"model_version": self.model_version,

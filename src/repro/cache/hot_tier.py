@@ -107,6 +107,74 @@ def tier_tick(state: HotTierState) -> HotTierState:
 
 
 # ---------------------------------------------------------------------------
+# host-side introspection (the quality plane's read surface)
+# ---------------------------------------------------------------------------
+def replica_age_stats(states: Sequence[HotTierState],
+                      life_span: Optional[int] = None) -> dict:
+    """Per-layer replica age/refresh-lag stats, read host-side.
+
+    ``hot_refresh_lag_l{l}`` is the mean age of the *filled* slots —
+    iterations since each replica was last refreshed (PR 5 ages the tier
+    every iteration but nothing observed it until now).  With a
+    ``life_span``, ``hot_replica_stale_frac_l{l}`` is the fraction of
+    filled slots a training lookup would already reject."""
+    out = {}
+    for l, st in enumerate(states, start=1):
+        age = np.asarray(st.age).reshape(-1)
+        filled = age < int(_NEVER)
+        out[f"hot_replica_filled_frac_l{l}"] = (
+            float(filled.mean()) if age.size else 0.0)
+        if filled.any():
+            fa = age[filled]
+            out[f"hot_refresh_lag_l{l}"] = float(fa.mean())
+            out[f"hot_replica_age_max_l{l}"] = float(fa.max())
+            if life_span is not None:
+                out[f"hot_replica_stale_frac_l{l}"] = \
+                    float((fa > life_span).mean())
+    return out
+
+
+def publish_replica_ages(states: Sequence[HotTierState],
+                         life_span: Optional[int] = None) -> dict:
+    """Publish :func:`replica_age_stats` gauges + the ``hot_replica_age``
+    histogram (filled-slot ages across all layers/ranks) into the active
+    registry.  Pure host reads — the replicas are never touched."""
+    stats = replica_age_stats(states, life_span=life_span)
+    reg = obs.get().registry
+    if not reg.enabled:
+        return stats
+    for name, v in stats.items():
+        reg.gauge(name).set(v)
+    for st in states:
+        age = np.asarray(st.age).reshape(-1)
+        filled = age < int(_NEVER)
+        if filled.any():
+            reg.histogram("hot_replica_age").observe_many(age[filled])
+    return stats
+
+
+def tier_entries(state: HotTierState, hot_vids: np.ndarray,
+                 life_span: Optional[int] = None):
+    """Host-side ``(vids, values, ages)`` of the fresh replica rows —
+    the exactness audit's hot-tier sampling hook.  Stacked ``[R, K, dim]``
+    states flatten across ranks (every rank's replica is auditable).
+    Freshness matches :func:`tier_lookup`: ``life_span=None`` accepts any
+    filled slot (serving), else ``age <= life_span`` (training)."""
+    hot_vids = np.asarray(hot_vids, np.int64)
+    K = len(hot_vids)
+    dim = state.values.shape[-1]
+    if not K:
+        return (np.zeros(0, np.int64), np.zeros((0, dim), np.float32),
+                np.zeros(0, np.int64))
+    age = np.asarray(state.age).reshape(-1)
+    vals = np.asarray(state.values).reshape(-1, dim)
+    fresh = age < int(_NEVER) if life_span is None \
+        else age <= int(life_span)
+    idx = np.flatnonzero(fresh)
+    return hot_vids[idx % K], vals[idx], age[idx].astype(np.int64)
+
+
+# ---------------------------------------------------------------------------
 # serving-side host object: stacked replicas + validity mirror + metrics
 # ---------------------------------------------------------------------------
 class HotTierCache:
@@ -215,6 +283,11 @@ class HotTierCache:
             out[f"hot_valid_l{k + 1}"] = (
                 float(self.valid[k].mean()) if self.num_slots else 0.0)
         return out
+
+    def publish_ages(self) -> dict:
+        """Publish replica age / refresh-lag telemetry for this cache's
+        stacked states (serving tier: no life-span)."""
+        return publish_replica_ages(self.states)
 
     def reset_counters(self):
         self.hot_hits = 0

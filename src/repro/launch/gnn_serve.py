@@ -44,6 +44,18 @@ def main():
                          "detection or an escaped exception")
     ap.add_argument("--slo-p99-ms", type=float, default=None,
                     help="arm the SLO-burn detector with this p99 target")
+    ap.add_argument("--audit-interval", type=int, default=0, metavar="N",
+                    help="N > 0: run the exactness audit after each serve "
+                         "pass (sampled cached embeddings vs offline "
+                         "recompute, relative-L2 error)")
+    ap.add_argument("--quality-budget", type=float, default=None,
+                    metavar="ERR",
+                    help="arm the quality-budget detector: audit mean "
+                         "error persistently above ERR dumps "
+                         "FLIGHT_quality.json")
+    ap.add_argument("--prom-out", default=None, metavar="PATH",
+                    help="periodically write the registry in Prometheus "
+                         "text format (node-exporter textfile collector)")
     args = ap.parse_args()
 
     import jax
@@ -72,14 +84,30 @@ def main():
         obs.HealthConfig(
             flight_dir=args.flight_dir,
             slo_p99_s=args.slo_p99_ms / 1e3
-            if args.slo_p99_ms is not None else None),
+            if args.slo_p99_ms is not None else None,
+            quality_budget=args.quality_budget),
         num_ranks=1)
+    prom = obs.PromFileWriter(args.prom_out, min_interval_s=1.0) \
+        if args.prom_out else None
+    quality = obs.QualityPlane(
+        obs.QualityConfig(audit_interval=args.audit_interval),
+        health=health, prom=prom) if args.audit_interval else None
     srv = GNNServeScheduler(
         cfg, params, part,
         GNNServeConfig(num_slots=args.slots,
                        cache=ServeCacheConfig(cache_size=args.cache_size,
                                               ways=8)),
-        health=health)
+        health=health, quality=quality)
+
+    def maybe_audit(label):
+        if quality is None:
+            return
+        rep = srv.audit()
+        fmt = "n/a" if rep.mean_err is None else f"{rep.mean_err:.5f}"
+        print(f"audit:      [{label}] mean rel-L2 err={fmt} over "
+              f"{sum(v['n'] for v in rep.per_layer.values())} sampled lines")
+        if prom is not None:
+            prom.maybe_write(obs.get().registry)
 
     rng = np.random.default_rng(0)
     n_unique = max(1, int(round(args.queries * (1 - args.overlap))))
@@ -105,6 +133,7 @@ def main():
           + " ".join(f"l{k}={m[f'hit_rate_l{k}']:.2f}"
                      for k in range(1, cfg.num_layers + 1))
           + f"; occupancy l1={m['occupancy_l1']:.2f}")
+    maybe_audit("cold")
 
     if not args.no_prewarm:
         srv.update_params(params)
@@ -124,6 +153,7 @@ def main():
               f"({args.queries/t_warm:.0f} q/s), "
               f"{m['fast_path_hits'] - fp0} fast-path answers -> "
               f"{t_cold/t_warm:.1f}x cold throughput")
+        maybe_audit("warm")
 
     hs = health.summary()
     burn = hs["slo_burn"]
@@ -133,6 +163,8 @@ def main():
     for p in hs["flight_paths"]:
         print(f"flight:     {p}")
 
+    if prom is not None:
+        print(f"wrote {prom.write(obs.get().registry)}")
     for path in obs.flush():
         print(f"wrote {path}")
 

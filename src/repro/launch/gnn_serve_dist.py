@@ -58,6 +58,18 @@ def main():
                          "detection or an escaped exception")
     ap.add_argument("--slo-p99-ms", type=float, default=None,
                     help="arm the SLO-burn detector with this p99 target")
+    ap.add_argument("--audit-interval", type=int, default=0, metavar="N",
+                    help="N > 0: run the exactness audit after each serve "
+                         "pass (sampled cached embeddings vs distributed "
+                         "offline recompute, relative-L2 error)")
+    ap.add_argument("--quality-budget", type=float, default=None,
+                    metavar="ERR",
+                    help="arm the quality-budget detector: audit mean "
+                         "error persistently above ERR dumps "
+                         "FLIGHT_quality.json")
+    ap.add_argument("--prom-out", default=None, metavar="PATH",
+                    help="periodically write the registry in Prometheus "
+                         "text format (node-exporter textfile collector)")
     args = ap.parse_args()
 
     os.environ.setdefault(
@@ -96,9 +108,15 @@ def main():
             skew_metric="rank_serve_halo_rows",
             hot_metric="rank_serve_hot_hits",
             slo_p99_s=args.slo_p99_ms / 1e3
-            if args.slo_p99_ms is not None else None),
+            if args.slo_p99_ms is not None else None,
+            quality_budget=args.quality_budget),
         num_ranks=R,
         expected_halo_rows=[p.num_halo for p in ps.parts])
+    prom = obs.PromFileWriter(args.prom_out, min_interval_s=1.0) \
+        if args.prom_out else None
+    quality = obs.QualityPlane(
+        obs.QualityConfig(audit_interval=args.audit_interval),
+        health=health, prom=prom) if args.audit_interval else None
     srv = DistGNNServeScheduler(
         cfg, params, ps, make_gnn_mesh(R),
         DistServeConfig(num_slots=args.slots, halo_slots=args.halo_slots,
@@ -106,7 +124,19 @@ def main():
                                                ways=8),
                         hot_size=args.hot_size, dedup=not args.no_dedup,
                         round_batch=args.round_batch),
-        health=health)
+        health=health, quality=quality)
+
+    def maybe_audit(label):
+        if quality is None:
+            return
+        rep = srv.audit()
+        fmt = "n/a" if rep.mean_err is None else f"{rep.mean_err:.5f}"
+        hot_n = rep.hot["n"] if rep.hot else 0
+        print(f"audit:      [{label}] mean rel-L2 err={fmt} over "
+              f"{sum(v['n'] for v in rep.per_layer.values())} cache lines "
+              f"+ {hot_n} hot replicas")
+        if prom is not None:
+            prom.maybe_write(obs.get().registry)
     if srv.hot is not None:
         print(f"hot tier:   {srv.hot.num_slots} hub vertices replicated on "
               f"every shard; dedup={not args.no_dedup}, "
@@ -152,6 +182,7 @@ def main():
               f"replica, {m['hot_fast_path_hits']} tier fast-path "
               f"answers, {m['dedup_merged']} queries deduped into "
               f"shared slots")
+    maybe_audit("pass1")
 
     # repeat pass: overlapping neighborhoods now resident per shard
     srv.cache.reset_counters()
@@ -165,6 +196,7 @@ def main():
           f"({args.queries / dt2:.0f} q/s), {m['fast_path_hits']} fast-path, "
           f"cached-halo frac {m['cached_halo_frac']:.2f} -> "
           f"{dt / max(dt2, 1e-9):.1f}x first pass")
+    maybe_audit("repeat")
 
     hs = health.summary()
     fmt = lambda v, spec=".3f": "n/a" if v is None else f"{v:{spec}}"
@@ -175,6 +207,8 @@ def main():
     for p in hs["flight_paths"]:
         print(f"flight:     {p}")
 
+    if prom is not None:
+        print(f"wrote {prom.write(obs.get().registry)}")
     for path in obs.flush():
         print(f"wrote {path}")
 

@@ -28,6 +28,14 @@ def _configure_obs(args):
     return obs
 
 
+def _prom_writer(args, obs):
+    """--prom-out plumbing: a periodic node-exporter-textfile-style
+    export of the whole registry (quality/health gauges included)."""
+    if getattr(args, "prom_out", None) is None:
+        return None
+    return obs.PromFileWriter(args.prom_out, min_interval_s=1.0)
+
+
 def run_gnn(args):
     import jax
     import numpy as np
@@ -66,11 +74,19 @@ def run_gnn(args):
     # over the partitioning's expected halo distribution; train_epochs
     # dumps FLIGHT_*.json if a detector fires or the step loop dies
     health = obs.HealthPlane(
-        obs.HealthConfig(flight_dir=args.flight_dir),
+        obs.HealthConfig(flight_dir=args.flight_dir,
+                         quality_budget=args.quality_budget),
         num_ranks=args.ranks,
         expected_halo_rows=[p.num_halo for p in ps.parts])
+    # quality plane: staleness + convergence telemetry every epoch, the
+    # exactness audit every --audit-interval epochs, budget breaches
+    # routed through the health plane's FLIGHT_quality.json path
+    prom = _prom_writer(args, obs)
+    quality = obs.QualityPlane(
+        obs.QualityConfig(audit_interval=args.audit_interval),
+        health=health, prom=prom)
     tr = DistTrainer(cfg=cfg, mesh=mesh, num_ranks=args.ranks,
-                     mode=args.mode, health=health)
+                     mode=args.mode, health=health, quality=quality)
     state = tr.init_state(jax.random.key(args.seed))
     t0 = time.time()
     state, hist = tr.train_epochs(ps, dd, state, args.epochs, log_every=1)
@@ -83,8 +99,15 @@ def run_gnn(args):
     print(f"health: halo skew={fmt(hs['skew'])} "
           f"edge-cut drift={fmt(hs['edge_cut_drift'])} "
           f"detections={len(hs['detections'])}")
+    qs = quality.summary()
+    if qs["audits_run"]:
+        print(f"quality: audits={qs['audits_run']} "
+              f"mean_err={fmt(qs['last_mean_err'])} "
+              f"hidden_err={fmt(qs['last_hidden_err'])}")
     for p in hs["flight_paths"]:
         print(f"flight: {p}")
+    if prom is not None:
+        print(f"wrote {prom.write(obs.get().registry)}")
     for path in obs.flush():
         print(f"wrote {path}")
     if args.ckpt:
@@ -101,6 +124,7 @@ def run_lm(args):
     from repro.train.optimizer import AdamConfig
 
     obs = _configure_obs(args)
+    prom = _prom_writer(args, obs)
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
@@ -125,10 +149,14 @@ def run_lm(args):
         with obs.span("lm_step", step=i):
             params, opt, metrics = step(params, opt, batch)
         obs.count("lm_tokens", args.batch * args.seq, subsystem="lm")
+        if prom is not None:
+            prom.maybe_write(obs.get().registry)
         if i % max(1, args.steps // 10) == 0 or i == args.steps - 1:
             print(f"step {i}: loss={float(metrics['loss']):.4f} "
                   f"gnorm={float(metrics['grad_norm']):.3f}")
     print(f"{args.steps} steps in {time.time()-t0:.1f}s")
+    if prom is not None:
+        print(f"wrote {prom.write(obs.get().registry)}")
     for path in obs.flush():
         print(f"wrote {path}")
 
@@ -166,6 +194,17 @@ def main():
     g.add_argument("--flight-dir", default=".", metavar="DIR",
                    help="where the health plane dumps FLIGHT_*.json on a "
                         "detection or an escaped exception")
+    g.add_argument("--audit-interval", type=int, default=0, metavar="N",
+                   help="run the exactness audit every N epochs (0 = off): "
+                        "sampled cached embeddings vs offline recompute, "
+                        "relative-L2 error histograms per layer")
+    g.add_argument("--quality-budget", type=float, default=None,
+                   metavar="ERR",
+                   help="arm the quality-budget detector: audit mean error "
+                        "persistently above ERR dumps FLIGHT_quality.json")
+    g.add_argument("--prom-out", default=None, metavar="PATH",
+                   help="periodically write the registry in Prometheus "
+                        "text format (node-exporter textfile collector)")
     g.set_defaults(fn=run_gnn)
 
     l = sub.add_parser("lm")
@@ -180,6 +219,9 @@ def main():
                         "spans")
     l.add_argument("--metrics-out", default=None, metavar="PATH",
                    help="write the obs registry as JSONL")
+    l.add_argument("--prom-out", default=None, metavar="PATH",
+                   help="periodically write the registry in Prometheus "
+                        "text format (node-exporter textfile collector)")
     l.set_defaults(fn=run_lm)
 
     args = ap.parse_args()

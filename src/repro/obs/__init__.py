@@ -26,7 +26,15 @@ One process-wide :class:`Observability` runtime (swap it with
     hot-tier-decay detectors, and the bounded flight recorder that dumps
     ``FLIGHT_<reason>.json`` on a detection or an escaped exception
     (:class:`HealthPlane`, wired via ``DistTrainer(health=...)`` and the
-    serve schedulers' ``health=`` argument).
+    serve schedulers' ``health=`` argument),
+  * the **embedding quality plane** (:mod:`repro.obs.quality`): per-layer
+    HEC/hot-tier staleness-age histograms, the online exactness audit
+    (sampled cached embeddings vs exact offline recomputation, relative
+    L2), and the per-epoch convergence series — plus the
+    :class:`QualityBudgetDetector` that dumps ``FLIGHT_quality.json``
+    when audit error persists over budget (:class:`QualityPlane`, wired
+    via ``DistTrainer(quality=...)`` / the schedulers' ``quality=``
+    argument; audit armed with ``--audit-interval``).
 
 Instrumented code calls the module-level helpers::
 
@@ -53,9 +61,13 @@ from repro.obs.cluster import (RankAccumulator, SeriesView,  # noqa: F401
                                publish_rank_series, rank_series, skew_ratio)
 from repro.obs.detect import (Detection, EdgeCutDriftDetector,  # noqa: F401
                               HotTierDecayDetector, LoadSkewDetector,
-                              SLOBurnDetector, StragglerDetector)
+                              QualityBudgetDetector, SLOBurnDetector,
+                              StragglerDetector)
+from repro.obs.quality import (AuditReport, QualityConfig,  # noqa: F401
+                               QualityPlane, relative_l2)
 from repro.obs.registry import (Counter, Gauge, Histogram,  # noqa: F401
-                                MetricsRegistry, hit_rate_metrics)
+                                MetricsRegistry, PromFileWriter,
+                                hit_rate_metrics)
 from repro.obs.sentinel import (FlightRecorder, HealthConfig,  # noqa: F401
                                 HealthPlane)
 from repro.obs.tracing import Tracer, validate_chrome_trace  # noqa: F401

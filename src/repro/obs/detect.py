@@ -218,6 +218,45 @@ class SLOBurnDetector:
                      f"consecutive rounds"))]
 
 
+class QualityBudgetDetector:
+    """Embedding-quality budget breach: the exactness audit's mean
+    relative-L2 error above ``budget`` for ``window`` CONSECUTIVE audits.
+
+    Fed by :meth:`HealthPlane.observe_audit` (the quality plane reports
+    each audit's mean error there).  Epochs without an audit — or audits
+    that sampled zero cached entries (``mean_err=None``) — carry no
+    signal: the streak resets and nothing fires, exactly like the other
+    detectors' zero-denominator guard.  The ``reason`` slug is
+    ``quality``, so a sustained breach dumps ``FLIGHT_quality.json``."""
+
+    name = "quality_budget"
+
+    def __init__(self, budget: float, window: int = 2):
+        self.budget = float(budget)
+        self.window = int(window)
+        self.last_err: Optional[float] = None
+        self._streaks = _Streaks()
+
+    def update(self, epoch: int, mean_err: Optional[float]) \
+            -> List[Detection]:
+        if mean_err is None or not np.isfinite(mean_err):
+            self.last_err = None            # no audit data: no signal
+            self._streaks.reset()
+            return []
+        self.last_err = float(mean_err)
+        fired = self._streaks.update(
+            np.asarray([self.last_err > self.budget]), self.window)
+        if not fired[0]:
+            return []
+        return [Detection(
+            detector=self.name, reason="quality", epoch=epoch,
+            value=self.last_err, threshold=self.budget,
+            message=(f"audit mean relative-L2 error {self.last_err:.4f} "
+                     f"over the quality budget {self.budget:.4f} for "
+                     f"{self.window} consecutive audits — cached "
+                     f"embeddings have drifted past the error budget"))]
+
+
 class HotTierDecayDetector:
     """Hot-tier efficacy decaying: the window's hot-hit rate (hot hits /
     halo rows) falling below ``decay`` · its historical peak for

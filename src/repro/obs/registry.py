@@ -82,6 +82,18 @@ class Histogram:
         self.samples.append(value)
         self.count += 1
 
+    def observe_many(self, values):
+        """Bulk observe (one host array -> one deque extend).  Only the
+        last ``window`` samples can survive anyway, so oversized batches
+        are tail-truncated before the python-level iteration."""
+        a = np.asarray(values, np.float64).reshape(-1)
+        n = a.size
+        maxlen = self.samples.maxlen
+        if maxlen is not None and n > maxlen:
+            a = a[-maxlen:]
+        self.samples.extend(a.tolist())
+        self.count += n
+
     def reset(self):
         self.samples.clear()
         self.count = 0
@@ -135,6 +147,9 @@ class _NullHistogram(Histogram):
     __slots__ = ()
 
     def observe(self, value):
+        pass
+
+    def observe_many(self, values):
         pass
 
 
@@ -310,6 +325,44 @@ def _prom_labels(labels: Dict[str, str]) -> str:
                      .replace("\n", r"\n")
     inner = ",".join(f'{k}="{esc(v)}"' for k, v in sorted(labels.items()))
     return "{" + inner + "}"
+
+
+class PromFileWriter:
+    """Periodic ``to_prom_text`` file export — node-exporter
+    textfile-collector style (the launchers' ``--prom-out`` plumbing).
+
+    ``write`` dumps the registry to a temp file in the target directory
+    and atomically renames it over ``path``, so a concurrently scraping
+    collector never reads a torn exposition.  ``maybe_write`` rate-limits
+    to one write per ``min_interval_s`` (callers invoke it at every
+    epoch/round boundary and let the writer decide)."""
+
+    def __init__(self, path: str, min_interval_s: float = 0.0):
+        self.path = path
+        self.min_interval_s = float(min_interval_s)
+        self.writes = 0
+        self._last_write: Optional[float] = None
+
+    def write(self, reg: MetricsRegistry) -> str:
+        import os
+        import time
+        d = os.path.dirname(os.path.abspath(self.path))
+        os.makedirs(d, exist_ok=True)
+        tmp = f"{self.path}.tmp.{os.getpid()}"
+        with open(tmp, "w") as f:
+            f.write(reg.to_prom_text())
+        os.replace(tmp, self.path)
+        self.writes += 1
+        self._last_write = time.monotonic()
+        return self.path
+
+    def maybe_write(self, reg: MetricsRegistry) -> Optional[str]:
+        import time
+        if (self._last_write is not None and self.min_interval_s > 0.0
+                and time.monotonic() - self._last_write
+                < self.min_interval_s):
+            return None
+        return self.write(reg)
 
 
 def hit_rate_metrics(reg: MetricsRegistry) -> dict:

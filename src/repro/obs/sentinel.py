@@ -128,6 +128,10 @@ class HealthConfig:
     hot_metric: str = "rank_hot_hits"
     hot_decay: float = 0.5
     hot_window: int = 3
+    # embedding-quality budget (active only when a budget is set; fed by
+    # the quality plane's exactness audit via `observe_audit`)
+    quality_budget: Optional[float] = None
+    quality_window: int = 2
 
 
 class HealthPlane:
@@ -166,6 +170,10 @@ class HealthPlane:
                 c.slo_min_samples)
         self.hot_decay = detect.HotTierDecayDetector(c.hot_decay,
                                                      c.hot_window)
+        self.quality = None
+        if c.quality_budget is not None:
+            self.quality = detect.QualityBudgetDetector(c.quality_budget,
+                                                        c.quality_window)
         self.detections: List[detect.Detection] = []
         self.flight_paths: List[str] = []
         self._window = 0
@@ -239,6 +247,28 @@ class HealthPlane:
     # serve rounds are the serve-side window unit; same machinery
     observe_round = observe_epoch
 
+    def observe_audit(self, epoch: int, mean_err: Optional[float]
+                      ) -> List[detect.Detection]:
+        """Feed one exactness-audit result (the quality plane's mean
+        relative-L2 error; ``None`` = audit sampled nothing) through the
+        budget detector.  Audits are sparser than epochs, so they get
+        their own entry point instead of riding ``observe_epoch``."""
+        if not self.enabled:
+            return []
+        reg = self._reg()
+        self.recorder.note("audit", epoch=int(epoch),
+                           mean_err=None if mean_err is None
+                           else round(float(mean_err), 6))
+        if reg.enabled and mean_err is not None:
+            reg.gauge("health_audit_err").set(float(mean_err))
+        if self.quality is None:
+            return []
+        new = self.quality.update(int(epoch), mean_err)
+        for d in new:
+            self._on_detection(d, reg)
+        self.detections.extend(new)
+        return new
+
     # -- anomaly handling -----------------------------------------------------
     def _on_detection(self, d: detect.Detection, reg: MetricsRegistry):
         self.recorder.note("detection", **d.to_json())
@@ -286,4 +316,5 @@ class HealthPlane:
             "edge_cut_drift": self.drift.last_drift if self.drift else None,
             "slo_burn": self.slo.last_burn if self.slo else None,
             "hot_rate": self.hot_decay.last_rate,
+            "audit_err": self.quality.last_err if self.quality else None,
         }

@@ -144,7 +144,8 @@ class DistGNNServeScheduler(ServeFrontend):
 
     def __init__(self, cfg, params, ps: PartitionSet, mesh,
                  serve_cfg: Optional[DistServeConfig] = None,
-                 health: Optional["obs.HealthPlane"] = None):
+                 health: Optional["obs.HealthPlane"] = None,
+                 quality: Optional["obs.QualityPlane"] = None):
         self.cfg = cfg
         self.scfg = serve_cfg or DistServeConfig()
         self.ps = ps
@@ -157,6 +158,10 @@ class DistGNNServeScheduler(ServeFrontend):
         # compiled serve step is identical with or without it.
         self.health = health \
             if (health is not None and health.enabled) else None
+        # quality plane: shard-cache + hot-replica staleness telemetry and
+        # the on-demand exactness audit (`audit`); host-side reads only
+        self.quality = quality \
+            if (quality is not None and quality.enabled) else None
         self.data = build_serve_data(ps)
         self.cache = ShardedServingCache(serve_layer_dims(cfg), ps,
                                          self.scfg.cache)
@@ -445,6 +450,37 @@ class DistGNNServeScheduler(ServeFrontend):
         if self.hot is not None:
             out.update(self.hot.metrics())
         return out
+
+    def audit(self, epoch: Optional[int] = None):
+        """On-demand exactness audit across every shard: sample cached
+        lines per layer (tags are VID_o, so the distributed offline pass's
+        global ``[V, d]`` embeddings index directly), recompute exact, and
+        publish relative-L2 error — plus the hot-tier replica divergence.
+        Shards warmed from the offline pass audit to exactly 0.0."""
+        q = self.quality
+        assert q is not None, "audit needs DistGNNServeScheduler(quality=...)"
+        from repro.serve.gnn.distributed.offline import \
+            layerwise_embeddings_dist
+        exact = layerwise_embeddings_dist(self.cfg, self.params, self.ps)
+        layer_samples = []
+        for k in range(self.cache.num_layers):
+            vids, cached, ages = self.cache.cached_entries(
+                k, sample=q.cfg.audit_samples, rng=q.rng)
+            layer_samples.append((k + 1, cached, exact[k][vids], ages))
+        hot_samples = None
+        if self.hot is not None:
+            # per-layer pairs: tier widths differ across layers, so the
+            # quality plane concatenates error vectors, not rows
+            hot_samples = []
+            for k, st in enumerate(self.hot.states):
+                vids, vals, _ = hot_lib.tier_entries(st, self.hot.hot_vids)
+                if len(vids):
+                    hot_samples.append((vals, exact[k][vids]))
+            self.hot.publish_ages()
+        q.publish_staleness(self.cache.states, layer_of=lambda i: i + 1)
+        return q.run_audit(
+            self.steps_run if epoch is None else epoch,
+            layer_samples, hot_samples=hot_samples, source="serve_dist")
 
     # -- internals -----------------------------------------------------------
     def _record_rank_round(self, stats: dict, wall_s: float):

@@ -161,7 +161,8 @@ class ServeFrontend:
 class GNNServeScheduler(ServeFrontend):
     def __init__(self, cfg, params, part: Partition,
                  serve_cfg: Optional[GNNServeConfig] = None,
-                 health: Optional["obs.HealthPlane"] = None):
+                 health: Optional["obs.HealthPlane"] = None,
+                 quality: Optional["obs.QualityPlane"] = None):
         assert part.num_halo == 0, "serving is single-partition"
         self.cfg = cfg
         self.scfg = serve_cfg or GNNServeConfig()
@@ -171,6 +172,10 @@ class GNNServeScheduler(ServeFrontend):
         # serve latency histogram + flight recording; pure host bookkeeping
         self.health = health \
             if (health is not None and health.enabled) else None
+        # quality plane: cache staleness telemetry + the on-demand
+        # exactness audit (`audit`); host-side reads only
+        self.quality = quality \
+            if (quality is not None and quality.enabled) else None
         self.features = jnp.asarray(part.features)
         self.cache = ServingCache(serve_layer_dims(cfg), part.num_solid,
                                   self.scfg.cache)
@@ -315,6 +320,32 @@ class GNNServeScheduler(ServeFrontend):
         out = self.cache.metrics()
         out.update(self._frontend_metrics(len(self.queue)))
         return out
+
+    def audit(self, epoch: Optional[int] = None):
+        """On-demand exactness audit: sample cached lines from every
+        serving layer, recompute their exact ``h^k`` with the offline
+        layerwise pass, publish relative-L2 error (+ staleness ages).
+
+        Serving stores full-graph-equivalent activations (dropout 0.0,
+        cached leaves are themselves exact), so a cache warmed from the
+        offline embeddings audits to EXACTLY 0.0 — the fresh-cache pin in
+        ``tests/test_quality.py``.  Cache layer ``k`` (0-based) holds
+        ``h^{k+1}``; tags are local vids."""
+        q = self.quality
+        assert q is not None, "audit needs GNNServeScheduler(quality=...)"
+        from repro.serve.gnn.offline import layerwise_embeddings
+        exact = [np.asarray(e) for e in layerwise_embeddings(
+            self.cfg, self.params, self.part)]
+        layer_samples = []
+        for k in range(self.cache.num_layers):
+            vids, cached, ages = self.cache.cached_entries(
+                k, sample=q.cfg.audit_samples, rng=q.rng)
+            layer_samples.append((k + 1, cached, exact[k][vids], ages))
+        q.publish_staleness(self.cache.states,
+                            layer_of=lambda i: i + 1)
+        return q.run_audit(
+            self.steps_run if epoch is None else epoch,
+            layer_samples, source="serve")
 
     # -- internals -----------------------------------------------------------
     def _answer_from_output_cache(self, wave: List[GNNRequest]):

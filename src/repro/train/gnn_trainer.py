@@ -169,6 +169,12 @@ class DistTrainer:
     # fires or an exception escapes the step loop.  Host-side only — the
     # compiled step is identical with or without it.
     health: Optional["obs.HealthPlane"] = None
+    # embedding quality plane (obs.QualityPlane): HEC/hot-tier staleness
+    # telemetry + convergence series every epoch, and — when its
+    # audit_interval is armed — the online exactness audit (`audit`).
+    # Host-side reads of existing state with its own RNG, so the training
+    # trajectory is bit-identical with the plane off or on.
+    quality: Optional["obs.QualityPlane"] = None
 
     def __post_init__(self):
         if self.engine is None:
@@ -488,6 +494,8 @@ class DistTrainer:
         # whether anyone reads rank_stats or not.
         health = self.health \
             if (self.health is not None and self.health.enabled) else None
+        quality = self.quality \
+            if (self.quality is not None and self.quality.enabled) else None
         acc = obs.RankAccumulator(self.num_ranks) \
             if (reg.enabled or health) else None
         guard = health.guard("train_step_loop") if health \
@@ -546,6 +554,18 @@ class DistTrainer:
                         obs.publish_rank_series(reg, totals)
                     if health:
                         health.observe_epoch(totals, wall_s=wall)
+                if quality:
+                    # instruments 1+3: staleness read off the live device
+                    # state (one host transfer per layer), convergence
+                    # point into the event log.  Instrument 2 (the audit,
+                    # an extra offline forward pass) only on its interval.
+                    quality.observe_epoch(ep, metrics=mean)
+                    quality.publish_staleness(state["hec"])
+                    if state["hot"]:
+                        hot_lib.publish_replica_ages(
+                            state["hot"], life_span=cfg.hec.life_span)
+                    if quality.should_audit(ep):
+                        self.audit(ps, dist_data, state, epoch=ep)
                 history.append(mean)
                 if log_every:
                     hl = [f"l{l}:{mean.get(f'hec_hits_l{l}', 0)/max(mean.get(f'hec_halos_l{l}',1),1):.2f}"
@@ -557,6 +577,56 @@ class DistTrainer:
                           f"acc={mean['acc']:.3f} hit-rates {' '.join(hl)}")
         state["step"] = jnp.asarray(step_idx, jnp.int32)
         return state, history
+
+    def audit(self, ps, dist_data, state, epoch: int = 0):
+        """Online exactness audit: sample cached lines from each training
+        HEC (and fresh hot-tier replicas), recompute their exact ``h^l``
+        via the offline inference path, and publish relative-L2 error.
+
+        ``HEC_0`` caches raw input features — exact at any age.  Hidden
+        layers cache sampled-neighborhood forward activations (with the
+        live dropout), so even a freshly pushed line carries the paper's
+        minibatch approximation error relative to full-graph inference;
+        that gap is exactly what this instrument measures, on top of the
+        staleness drift.  Reads the training state, never writes it — the
+        trajectory is untouched."""
+        q = self.quality
+        assert q is not None, "audit needs DistTrainer(quality=...)"
+        cfg = self.cfg
+        V = len(ps.owner)
+        # exact references in global VID_o order (the training HECs' tag
+        # space): layer 0 = the raw features, layers >= 1 = full-graph
+        # layerwise inference (deterministic; dropout off)
+        feats = np.zeros((V, cfg.feat_dim), np.float32)
+        for p in ps.parts:
+            feats[p.solid_vids] = np.asarray(p.features, np.float32)
+        exact = [feats]
+        if cfg.num_layers > 1:
+            from repro.serve.gnn.distributed.offline import \
+                layerwise_embeddings_dist
+            exact += layerwise_embeddings_dist(
+                cfg, state["params"], ps)[:cfg.num_layers - 1]
+        layer_samples = []
+        for l in range(cfg.num_layers):
+            vids, cached, ages = hec_lib.hec_entries(
+                state["hec"][l], sample=q.cfg.audit_samples, rng=q.rng)
+            layer_samples.append((l, cached, exact[l][vids], ages))
+        hot_samples = None
+        if state["hot"] and dist_data is not None \
+                and "hot_vids" in dist_data:
+            hv = np.asarray(dist_data["hot_vids"])[0]   # same table per rank
+            # per-layer pairs (layer widths differ; the plane concatenates
+            # error vectors, not rows); tier storage may be padded wider
+            # than the layer, so slice to the exact reference's width
+            hot_samples = []
+            for l, st in enumerate(state["hot"]):
+                vids, vals, _ = hot_lib.tier_entries(
+                    st, hv, life_span=cfg.hec.life_span)
+                if len(vids):
+                    hot_samples.append(
+                        (vals[:, :exact[l].shape[1]], exact[l][vids]))
+        return q.run_audit(epoch, layer_samples, hot_samples=hot_samples,
+                           source="train")
 
     def evaluate(self, ps, dist_data, state, num_batches=8, seed0=123,
                  step_fn=None, pipeline="auto"):

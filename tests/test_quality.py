@@ -1,0 +1,362 @@
+"""Embedding quality plane tests: the fresh-cache audit pinned at exactly
+0.0 (bit-match vs the offline path), staleness telemetry vs a plain-numpy
+reference over ``HECState.age``, the quality-budget detector (fires on an
+injected over-budget trace, silent on clean runs, resets on no-signal),
+and the bit-identity contract — training and serving compute the same
+bits with the quality plane off or on."""
+import json
+import os
+from types import SimpleNamespace
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.cache import hec as hec_lib
+from repro.cache import hot_tier as hot_lib
+from repro.configs.gnn import small_gnn_config
+from repro.graph import partition_graph, synthetic_graph
+from repro.obs.quality import cache_entries, relative_l2, valid_ages
+from repro.serve.gnn import (GNNServeConfig, GNNServeScheduler,
+                             ServeCacheConfig, layerwise_embeddings,
+                             warm_cache)
+from repro.train.gnn_trainer import (DistTrainer, build_dist_data,
+                                     init_model_params)
+
+
+@pytest.fixture(autouse=True)
+def fresh_obs():
+    obs.configure()
+    yield
+    obs.configure()
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    g = synthetic_graph(num_vertices=400, avg_degree=5, num_classes=4,
+                        feat_dim=8, seed=0)
+    ps = partition_graph(g, 1, seed=0)
+    cfg = small_gnn_config("graphsage", batch_size=16, feat_dim=8,
+                           num_classes=4, fanouts=(3, 3), hidden_size=16)
+    mesh = jax.make_mesh((1,), ("data",))
+    dd = build_dist_data(ps, cfg)
+    return ps, cfg, mesh, dd
+
+
+# -- pure helpers ------------------------------------------------------------
+def test_relative_l2_semantics():
+    a = np.random.default_rng(0).normal(size=(16, 8)).astype(np.float32)
+    err = relative_l2(a, a.copy())
+    assert err.shape == (16,)
+    assert (err == 0.0).all()                 # bit-equal rows: EXACTLY zero
+    # known analytic case: cached = 2 * exact -> ||e|| / ||e|| = 1
+    np.testing.assert_allclose(relative_l2(2 * a, a), np.ones(16),
+                               rtol=1e-12)
+    # all-zero exact rows: absolute norm over eps, still exact 0 on match
+    z = np.zeros((3, 4))
+    assert (relative_l2(z, z) == 0.0).all()
+    assert relative_l2(np.ones((1, 4)), np.zeros((1, 4)))[0] > 1.0
+
+
+def test_staleness_matches_numpy_reference_over_hec_age():
+    """Satellite: the published age telemetry equals a plain-numpy read
+    of ``HECState.age`` masked by valid tags, through store/tick purges."""
+    st = hec_lib.hec_init(64, 4, 8)
+    st = hec_lib.hec_store(st, jnp.arange(40, dtype=jnp.int32),
+                           jnp.ones((40, 8)))
+    st = hec_lib.hec_tick(st, life_span=3)    # everyone ages to 1
+    st = hec_lib.hec_store(st, jnp.arange(40, 60, dtype=jnp.int32),
+                           jnp.full((20, 8), 2.0))
+    st = hec_lib.hec_tick(st, life_span=3)
+
+    tags = np.asarray(st.tags).reshape(-1)
+    ref = np.asarray(st.age).reshape(-1)[tags >= 0]
+    got = valid_ages(st)
+    np.testing.assert_array_equal(got, ref)
+    np.testing.assert_array_equal(hec_lib.hec_valid_ages(st), ref)
+    assert set(np.unique(ref)) <= {1, 2}      # two tick generations live
+
+    reg = obs.MetricsRegistry()
+    q = obs.QualityPlane(registry=reg)
+    q.publish_staleness([st])
+    h = reg.histogram("hec_stale_age_l0")
+    assert h.count == ref.size
+    np.testing.assert_array_equal(np.sort(h.samples), np.sort(ref))
+    assert reg.value("hec_stale_age_mean_l0") == pytest.approx(ref.mean())
+    assert reg.value("hec_stale_age_max_l0") == ref.max()
+    assert reg.value("hec_filled_frac_l0") == \
+        pytest.approx((tags >= 0).mean())
+    # life-span purge empties the cache -> filled 0, no age histogram rows
+    st = hec_lib.hec_tick(hec_lib.hec_tick(st, 1), 1)
+    assert valid_ages(st).size == 0
+
+
+def test_cache_entries_sampling_and_stacked_flatten():
+    st = hec_lib.hec_init(256, 4, 8)
+    st = hec_lib.hec_store(st, jnp.arange(30, dtype=jnp.int32),
+                           jnp.arange(30, dtype=jnp.float32)[:, None]
+                           * jnp.ones((30, 8)))
+    vids, vals, ages = cache_entries(st)
+    # same-set conflicts beyond the associativity can drop entries, but
+    # every surviving line is a stored vid at age 0 with its stored row
+    assert 10 < len(vids) <= 30 and set(vids) <= set(range(30))
+    assert (ages == 0).all()
+    np.testing.assert_array_equal(vals, vids[:, None] * np.ones((1, 8)))
+    # sampling caps the count without replacement
+    v10, _, _ = cache_entries(st, sample=10, rng=np.random.default_rng(0))
+    assert len(v10) == len(set(v10)) == 10 and set(v10) <= set(vids)
+    # a stacked [R, ...] state flattens: every rank's replica is an entry
+    stacked = SimpleNamespace(
+        tags=jnp.stack([st.tags, st.tags]),
+        age=jnp.stack([st.age, st.age]),
+        values=jnp.stack([st.values, st.values]))
+    v2, _, _ = cache_entries(stacked)
+    assert len(v2) == 2 * len(vids)
+
+
+def test_hot_tier_entries_and_replica_age_stats():
+    _NEVER = int(hot_lib._NEVER)
+    hv = np.array([7, 11, 13, 17])
+    st = SimpleNamespace(                     # [R=2, K=4] stacked replicas
+        age=jnp.asarray(np.array([[0, 2, _NEVER, 1],
+                                  [1, _NEVER, 3, 0]], np.int32)),
+        values=jnp.asarray(
+            np.arange(2 * 4 * 8, dtype=np.float32).reshape(2, 4, 8)))
+    vids, vals, ages = hot_lib.tier_entries(st, hv)     # serving: filled
+    np.testing.assert_array_equal(vids, [7, 11, 17, 7, 13, 17])
+    np.testing.assert_array_equal(ages, [0, 2, 1, 1, 3, 0])
+    assert vals.shape == (6, 8)
+    # training freshness: age <= life_span
+    vids, _, ages = hot_lib.tier_entries(st, hv, life_span=1)
+    np.testing.assert_array_equal(vids, [7, 17, 7, 17])
+    assert (ages <= 1).all()
+    assert hot_lib.tier_entries(st, np.zeros(0))[0].size == 0
+
+    stats = hot_lib.replica_age_stats([st], life_span=2)
+    assert stats["hot_replica_filled_frac_l1"] == pytest.approx(6 / 8)
+    assert stats["hot_refresh_lag_l1"] == pytest.approx(7 / 6)
+    assert stats["hot_replica_age_max_l1"] == 3.0
+    assert stats["hot_replica_stale_frac_l1"] == pytest.approx(1 / 6)
+    # publish path: same numbers into the active registry + histogram
+    hot_lib.publish_replica_ages([st], life_span=2)
+    reg = obs.get().registry
+    assert reg.value("hot_refresh_lag_l1") == pytest.approx(7 / 6)
+    assert reg.histogram("hot_replica_age").count == 6
+
+
+# -- plane plumbing ----------------------------------------------------------
+def test_should_audit_schedule():
+    q = obs.QualityPlane(obs.QualityConfig(audit_interval=2))
+    assert [q.should_audit(e) for e in range(5)] == \
+        [False, True, False, True, False]
+    assert not any(obs.QualityPlane().should_audit(e) for e in range(5))
+    off = obs.QualityPlane(obs.QualityConfig(enabled=False,
+                                             audit_interval=1))
+    assert not off.should_audit(0)
+
+
+def test_histogram_observe_many_truncates_to_window():
+    h = obs.Histogram(window=8)
+    h.observe_many(np.arange(20))
+    assert h.count == 20                      # lifetime count keeps all
+    assert list(h.samples) == list(range(12, 20))   # window keeps the tail
+    h.observe_many(np.zeros(0))               # empty bulk is a no-op
+    assert h.count == 20
+
+
+def test_prom_file_writer_rate_limit(tmp_path):
+    reg = obs.MetricsRegistry()
+    reg.counter("quality_audits").inc(3)
+    w = obs.PromFileWriter(str(tmp_path / "m.prom"), min_interval_s=60.0)
+    path = w.write(reg)
+    text = open(path).read()
+    assert "# TYPE quality_audits counter" in text
+    assert "quality_audits 3.0" in text
+    assert w.writes == 1
+    assert w.maybe_write(reg) is None         # inside min_interval: skipped
+    assert w.writes == 1
+    w2 = obs.PromFileWriter(str(tmp_path / "m2.prom"), min_interval_s=0.0)
+    assert w2.maybe_write(reg) is not None    # interval 0: always writes
+
+
+# -- detector ----------------------------------------------------------------
+def test_quality_budget_detector_fires_and_resets():
+    det = obs.QualityBudgetDetector(budget=0.1, window=2)
+    for ep in range(4):                       # clean trace: silent
+        assert det.update(ep, 0.05) == []
+    assert det.update(4, 0.5) == []           # streak 1
+    fired = det.update(5, 0.5)                # rising edge at window=2
+    assert len(fired) == 1
+    d = fired[0]
+    assert d.detector == "quality_budget" and d.reason == "quality"
+    assert d.value == pytest.approx(0.5) and d.threshold == pytest.approx(0.1)
+    assert det.update(6, 0.5) == []           # sustained: no re-fire
+    assert det.update(7, None) == []          # no-signal audit resets
+    assert det.last_err is None
+    assert det.update(8, 0.5) == []           # streak restarted at 1
+    assert len(det.update(9, 0.5)) == 1
+    assert det.update(10, float("nan")) == [] # non-finite = no signal
+
+
+def test_health_plane_observe_audit_dumps_flight_quality(tmp_path):
+    reg = obs.MetricsRegistry()
+    hp = obs.HealthPlane(
+        obs.HealthConfig(flight_dir=str(tmp_path), quality_budget=0.1,
+                         quality_window=2),
+        num_ranks=1, registry=reg)
+    assert hp.observe_audit(0, 0.5) == []
+    dets = hp.observe_audit(1, 0.5)
+    assert [d.detector for d in dets] == ["quality_budget"]
+    assert reg.value("health_audit_err") == 0.5
+    dump = tmp_path / "FLIGHT_quality.json"
+    assert dump.exists()
+    d = json.loads(dump.read_text())
+    assert d["detection"]["detector"] == "quality_budget"
+    assert any(e["kind"] == "audit" for e in d["entries"])
+    assert hp.summary()["audit_err"] == 0.5
+
+
+def test_health_plane_observe_audit_silent_on_clean_run(tmp_path):
+    hp = obs.HealthPlane(
+        obs.HealthConfig(flight_dir=str(tmp_path), quality_budget=0.1),
+        num_ranks=1, registry=obs.MetricsRegistry())
+    for ep in range(6):
+        assert hp.observe_audit(ep, 0.01) == []
+    assert not list(tmp_path.glob("FLIGHT_*.json"))
+    # no budget armed -> observe_audit records but never detects
+    hp2 = obs.HealthPlane(obs.HealthConfig(flight_dir=str(tmp_path)),
+                          num_ranks=1, registry=obs.MetricsRegistry())
+    assert hp2.observe_audit(0, 99.0) == []
+    assert hp2.summary()["audit_err"] is None
+
+
+def test_run_audit_publishes_and_routes_budget(tmp_path):
+    reg = obs.MetricsRegistry()
+    hp = obs.HealthPlane(
+        obs.HealthConfig(flight_dir=str(tmp_path), quality_budget=0.1,
+                         quality_window=1),
+        num_ranks=1, registry=reg)
+    q = obs.QualityPlane(obs.QualityConfig(audit_interval=1), health=hp,
+                         registry=reg)
+    cached = np.full((4, 3), 1.0)
+    exact = np.full((4, 3), 2.0)              # row err = 0.5 exactly
+    rep = q.run_audit(0, [(1, cached, exact, np.ones(4))],
+                      hot_samples=[(cached, exact)])
+    assert rep.mean_err == pytest.approx(0.5)
+    assert rep.hidden_mean_err() == pytest.approx(0.5)
+    assert rep.per_layer[1]["n"] == 4
+    assert rep.per_layer[1]["age_mean"] == 1.0
+    assert rep.hot["n"] == 4
+    assert reg.histogram("hec_audit_err_l1").count == 4
+    assert reg.histogram("hot_audit_err").count == 4
+    assert reg.value("quality_audits") == 1.0
+    ev = list(reg.events_of("audit"))
+    assert len(ev) == 1 and ev[0]["mean_err"] == pytest.approx(0.5)
+    # budget 0.1 with window 1: the breach dumped FLIGHT_quality.json
+    assert (tmp_path / "FLIGHT_quality.json").exists()
+    assert q.summary()["audits_run"] == 1
+    # an empty audit is a no-signal report, not a zero
+    rep2 = q.run_audit(1, [(1, np.zeros((0, 3)), np.zeros((0, 3)),
+                            np.zeros(0))])
+    assert rep2.mean_err is None and rep2.hidden_mean_err() is None
+
+
+# -- serving: the exactly-0.0 pin + bit-identity -----------------------------
+@pytest.fixture(scope="module")
+def serve_setup(tiny_setup):
+    ps, cfg, _, _ = tiny_setup
+    part = ps.parts[0]
+    params = init_model_params(jax.random.key(0), cfg)
+    scfg = GNNServeConfig(num_slots=8,
+                          cache=ServeCacheConfig(cache_size=1024, ways=4))
+    return cfg, params, part, scfg
+
+
+def test_fresh_cache_audit_error_exactly_zero(serve_setup):
+    """Acceptance: a cache warmed from the offline embeddings audits to
+    EXACTLY 0.0 — the serving cache stores the very float32 rows the
+    audit recomputes, so every sampled line bit-matches."""
+    cfg, params, part, scfg = serve_setup
+    quality = obs.QualityPlane(obs.QualityConfig(audit_samples=64))
+    srv = GNNServeScheduler(cfg, params, part, scfg, quality=quality)
+    embs = layerwise_embeddings(cfg, params, part)
+    n = warm_cache(srv.cache, embs, np.arange(part.num_solid))
+    assert n > 0
+    rep = srv.audit(epoch=0)
+    assert sorted(rep.per_layer) == [1, 2]    # serving layers are h^1, h^2
+    for stats in rep.per_layer.values():
+        assert stats["n"] > 0
+        assert stats["err_max"] == 0.0        # exact, not approx
+    assert rep.mean_err == 0.0
+    assert rep.source == "serve"
+    # staleness telemetry rode along, labeled l=k+1
+    reg = obs.get().registry
+    assert reg.value("hec_filled_frac_l1") > 0
+    assert reg.histogram("hec_audit_err_l1").count == \
+        rep.per_layer[1]["n"]
+
+
+def test_serve_bit_identical_with_quality_plane_on_off(serve_setup):
+    cfg, params, part, scfg = serve_setup
+    vids = np.random.default_rng(1).integers(0, part.num_solid, 64)
+
+    def run(quality, audit):
+        srv = GNNServeScheduler(cfg, params, part, scfg, quality=quality)
+        o1 = srv.serve(vids)
+        if audit:
+            srv.audit()                       # between passes: pure read
+        return o1, srv.serve(vids)
+
+    a1, a2 = run(None, audit=False)
+    q = obs.QualityPlane(obs.QualityConfig(audit_interval=1))
+    b1, b2 = run(q, audit=True)
+    np.testing.assert_array_equal(a1, b1)
+    np.testing.assert_array_equal(a2, b2)
+    assert q.audits_run == 1
+
+
+# -- training: bit-identity + convergence telemetry --------------------------
+def test_train_bit_identical_with_quality_plane_on_off(tiny_setup):
+    """Acceptance: the quality plane only reads training state — the
+    loss/acc/grad-norm trajectory is bit-identical with it off or on
+    (audits every epoch included)."""
+    ps, cfg, mesh, dd = tiny_setup
+
+    def run(quality):
+        tr = DistTrainer(cfg=cfg, mesh=mesh, num_ranks=1, mode="aep",
+                         quality=quality)
+        state = tr.init_state(jax.random.key(0))
+        _, hist = tr.train_epochs(ps, dd, state, 2)
+        return hist
+
+    h_off = run(None)
+    q = obs.QualityPlane(obs.QualityConfig(audit_interval=1,
+                                           audit_samples=32))
+    h_on = run(q)
+    for a, b in zip(h_off, h_on):
+        assert a["loss"] == b["loss"] and a["acc"] == b["acc"]
+        assert a["grad_norm"] == b["grad_norm"]
+    assert q.audits_run == 2
+    # a 1-rank partition has no halos, so AEP never pushes and the
+    # training HECs stay empty: the audit correctly reports no signal
+    assert q.last_report.mean_err is None
+    # convergence telemetry flowed into the shared event log
+    evs = list(obs.get().registry.events_of("convergence"))
+    assert len(evs) == 2
+    assert all("loss" in e and "acc" in e for e in evs)
+    assert [e["epoch"] for e in evs] == [0, 1]
+    assert q.summary()["audits_run"] == 2
+
+
+def test_disabled_quality_plane_is_inert(tiny_setup):
+    ps, cfg, mesh, dd = tiny_setup
+    q = obs.QualityPlane(obs.QualityConfig(enabled=False,
+                                           audit_interval=1))
+    tr = DistTrainer(cfg=cfg, mesh=mesh, num_ranks=1, mode="aep",
+                     quality=q)
+    state = tr.init_state(jax.random.key(0))
+    tr.train_epochs(ps, dd, state, 1)
+    assert q.audits_run == 0
+    assert list(obs.get().registry.events_of("convergence")) == []
