@@ -1,8 +1,42 @@
-"""Render EXPERIMENTS.md roofline tables from dry-run jsons."""
+"""Render EXPERIMENTS.md roofline tables from dry-run jsons.
+
+``--kernels BENCH_kernels.json`` additionally renders measured roofline
+points for the PR 9 kernels: ``bench_kernels`` rows carry
+``flops=..;bytes=..;intensity=..`` in their derived field, so each row
+becomes an (intensity, achieved GFLOP/s) coordinate against the machine
+roofline.
+"""
 from __future__ import annotations
 
 import json
 import sys
+
+
+def _derived_dict(derived: str) -> dict:
+    out = {}
+    for part in derived.split(";"):
+        if "=" in part:
+            k, v = part.split("=", 1)
+            out[k] = v
+    return out
+
+
+def kernel_points(path):
+    """Measured roofline coordinates from a BENCH_kernels.json artifact."""
+    rec = json.load(open(path))
+    out = []
+    out.append("| kernel | time | intensity (flop/B) | achieved GFLOP/s | "
+               "speedup |")
+    out.append("|---|---|---|---|---|")
+    for r in rec.get("rows", []):
+        d = _derived_dict(r.get("derived", ""))
+        if "flops" not in d or "intensity" not in d:
+            continue
+        us = r["us_per_call"]
+        gflops = float(d["flops"]) / (us * 1e-6) / 1e9
+        out.append(f"| {r['name']} | {us:.0f}us | {float(d['intensity']):.2f}"
+                   f" | {gflops:.1f} | {d.get('speedup', '-')} |")
+    return "\n".join(out)
 
 
 def fmt_table(path, mesh_filter=None, baseline_path=None):
@@ -39,5 +73,8 @@ def fmt_table(path, mesh_filter=None, baseline_path=None):
 
 
 if __name__ == "__main__":
-    print(fmt_table(sys.argv[1],
-                    sys.argv[2] if len(sys.argv) > 2 else None))
+    if sys.argv[1] == "--kernels":
+        print(kernel_points(sys.argv[2]))
+    else:
+        print(fmt_table(sys.argv[1],
+                        sys.argv[2] if len(sys.argv) > 2 else None))

@@ -86,7 +86,8 @@ class HaloExchangeEngine:
 
     def __init__(self, num_ranks: int, num_layers: int = 1,
                  push_limit: int = 1, delay: int = 1, axis: str = "data",
-                 plan: Optional[ExchangePlan] = None, hot_budget: int = 0):
+                 plan: Optional[ExchangePlan] = None, hot_budget: int = 0,
+                 probe_kernel: bool = False):
         self.num_ranks = num_ranks
         self.num_layers = num_layers
         self.push_limit = push_limit     # nc: slots per rank pair
@@ -94,6 +95,8 @@ class HaloExchangeEngine:
         self.axis = axis
         self.plan = plan
         self.hot_budget = hot_budget     # hot rows broadcast per rank per step
+        self.probe_kernel = probe_kernel  # batched Pallas HEC probe in
+        #                                   cache_fetch (bit-identical off/on)
 
     @classmethod
     def from_partition(cls, ps, num_layers: int = 1, push_limit: int = 1,
@@ -371,9 +374,15 @@ class HaloExchangeEngine:
         req = jnp.stack(req_rows).astype(jnp.int32)        # [R, nslots]
         pos = jnp.stack(pos_rows)
         got_req = jax.lax.all_to_all(req, self.axis, 0, 0)  # [R_src, nslots]
-        own, vals = hec_lib.hec_lookup(state, got_req.reshape(-1))
-        own = own.reshape(R, nslots)
-        vals = vals.reshape(R, nslots, d)
+        if self.probe_kernel:
+            # batched Pallas probe: all R requesters' rows in ONE kernel
+            # grid (bit-identical to the flattened hec_lookup below)
+            from repro.kernels.hec_search import hec_probe
+            own, vals = hec_probe(state, got_req)
+        else:
+            own, vals = hec_lib.hec_lookup(state, got_req.reshape(-1))
+            own = own.reshape(R, nslots)
+            vals = vals.reshape(R, nslots, d)
         resp = jax.lax.all_to_all(
             jnp.concatenate(
                 [vals.astype(jnp.float32),

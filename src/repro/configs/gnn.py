@@ -44,6 +44,44 @@ class HECConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    """Fanout-draw policy and placement (host numpy vs on-device kernel).
+
+    ``device_draw=False`` (default) keeps the host vectorized sampler —
+    byte-identical to every prior release and the fallback for host-only
+    backends.  ``device_draw=True`` moves the per-layer neighbor draw
+    onto the device (``kernels/sample_draw.py``): deterministic per
+    (base_seed, epoch, step, rank, layer) via ``jax.random`` fold_in
+    chaining, hence bit-reproducible for any prefetch worker count.
+
+    Policies (device draw only — the host loop stays uniform):
+      uniform  iid neighbor sampling (NS; the paper's sampler)
+      labor    LABOR-style correlated draw: one shared hash key per
+               *vertex*, so overlapping fanouts select the same
+               neighbors and the minibatch frontier shrinks
+      cv       control-variate sampling (arxiv 1710.10568): LABOR keys
+               divided by ``1 + cv_boost * resident``, preferring
+               vertices whose historical activations sit in the HEC —
+               the trainer refreshes residency from the live cache tags
+               each epoch
+    """
+    policy: str = "uniform"         # uniform | labor | cv
+    device_draw: bool = False       # on-device kernel draw (host np default)
+    cv_boost: float = 4.0           # cv: weight boost for HEC-resident rows
+    use_kernel: bool = True         # Pallas keys kernel (False = jnp ref)
+    interpret: bool = True          # Pallas interpret mode (False on TPU)
+
+    def __post_init__(self):
+        if self.policy not in ("uniform", "labor", "cv"):
+            raise ValueError(f"policy must be uniform|labor|cv, "
+                             f"got {self.policy!r}")
+        if self.policy != "uniform" and not self.device_draw:
+            raise ValueError(
+                f"policy={self.policy!r} needs device_draw=True "
+                f"(the host fallback draw is uniform-only)")
+
+
+@dataclasses.dataclass(frozen=True)
 class PipelineConfig:
     """Asynchronous minibatch pipeline (repro.pipeline) parameters.
 
@@ -64,6 +102,8 @@ class PipelineConfig:
     prefetch_depth: int = 1         # minibatches sampled ahead of the step
     double_buffer: bool = True      # overlap device_put(k+1) with step k
     vectorized: bool = True         # vectorized CSR sampler (vs reference)
+    sampler: SamplerConfig = dataclasses.field(
+        default_factory=SamplerConfig)
 
     def __post_init__(self):
         if self.num_workers < 0:

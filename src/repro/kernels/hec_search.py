@@ -38,6 +38,69 @@ def _search_kernel(sets_ref, vids_ref, tags_ref, hit_ref, way_ref):
     way_ref[...] = jnp.argmax(match).astype(jnp.int32).reshape(1, 1)
 
 
+def _search_batched_kernel(sets_ref, vids_ref, tags_ref, hit_ref, way_ref,
+                           *, n):
+    b = pl.program_id(0)
+    i = pl.program_id(1)
+    vid = vids_ref[b * n + i]
+    row = tags_ref[...]                       # [1, ways]
+    match = row[0, :] == vid
+    any_hit = jnp.any(match) & (vid >= 0)
+    hit_ref[...] = any_hit.reshape(1, 1)
+    way_ref[...] = jnp.argmax(match).astype(jnp.int32).reshape(1, 1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hec_search_batched(tags: jnp.ndarray, vids: jnp.ndarray, *,
+                       interpret=True):
+    """Probe N rounds' vids against one tag array in a single grid.
+
+    tags [nsets, ways] int32; vids [B, n] int32 (B = fused exchange
+    rounds) -> (hit [B, n], set [B, n], way [B, n]).  Per-probe math is
+    ``_search_kernel`` verbatim over a (B, n) grid, so each row of the
+    output bit-matches a ``hec_search_kernel`` call on that round — one
+    dispatch instead of B.
+    """
+    nsets, ways = tags.shape
+    bsz, n = vids.shape
+    flat = vids.reshape(-1).astype(jnp.int32)
+    sets = set_index(flat, nsets)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(bsz, n),
+        in_specs=[
+            pl.BlockSpec((1, ways), lambda b, i, s, v: (s[b * n + i], 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda b, i, s, v: (b * n + i, 0)),
+            pl.BlockSpec((1, 1), lambda b, i, s, v: (b * n + i, 0)),
+        ],
+    )
+    hit, way = pl.pallas_call(
+        functools.partial(_search_batched_kernel, n=n),
+        grid_spec=grid_spec,
+        out_shape=[jax.ShapeDtypeStruct((bsz * n, 1), jnp.bool_),
+                   jax.ShapeDtypeStruct((bsz * n, 1), jnp.int32)],
+        interpret=interpret,
+    )(sets, flat, tags)
+    return (hit[:, 0].reshape(bsz, n), sets.reshape(bsz, n),
+            way[:, 0].reshape(bsz, n))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def hec_probe(state, vids: jnp.ndarray, *, interpret=True):
+    """Batched HECSearch + HECLoad: vids [B, n] -> (hit [B, n], emb [B, n, d]).
+
+    Row-for-row bit-identical to ``hec.hec_lookup(state, vids[b])``: same
+    set hash, same argmax-way (0 on miss), same stop_gradient load, same
+    zeroed miss rows — pinned in tests/test_kernels.py and consumed by
+    ``HaloExchangeEngine.cache_fetch(rounds=N)``.
+    """
+    hit, sets, way = hec_search_batched(state.tags, vids, interpret=interpret)
+    emb = jax.lax.stop_gradient(state.values[sets, way])
+    return hit, jnp.where(hit[..., None], emb, 0.0)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def hec_search_kernel(tags: jnp.ndarray, vids: jnp.ndarray, *,
                       interpret=True):

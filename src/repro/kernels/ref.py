@@ -1,10 +1,17 @@
-"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth).
+
+Also home of the ONE composed serve-layer reference (``serve_layer_ref``):
+the offline chunk engines and the fused serve kernel's parity tests all
+call this function, so the "composed jnp serve layer" can never drift
+across the three places that used to spell it out independently.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.gnn.common import hash_uniform
+from repro.models.gnn.common import (_MIX1, _MIX2, gather_neighbors,
+                                     hash_uniform, masked_mean)
 
 
 def fused_update_ref(agg, self_h, wn, ws, b, *, relu=True, dropout=0.0,
@@ -29,6 +36,73 @@ def sage_agg_ref(h_src, nbr_idx, src_valid):
     feats = h_src[idx] * mask[..., None]
     cnt = mask.sum(axis=1, keepdims=True).astype(h_src.dtype)
     return feats.sum(axis=1) / jnp.maximum(cnt, 1.0)
+
+
+def serve_layer_ref(p, h_src, nbr_idx, src_valid, self_h=None, *, relu=True):
+    """The composed jnp serve layer: gather + masked mean + UPDATE.
+
+    Single source of truth for the serve-path layer math — the online
+    schedulers' non-fused path, the offline chunk engines, and the
+    ``serve_fused`` parity tests all funnel through this exact op
+    sequence (serving always runs with dropout off).
+
+    p         layer param dict with "wn" [D,K], "ws" [D,K], "b" [K]
+    h_src     [N, D] source activations
+    nbr_idx   [M, f] neighbor rows into h_src, -1 = padded/absent
+    src_valid [N]    bool validity of each source row
+    self_h    [M, D] self activations (default: ``h_src[:M]`` prefix)
+    """
+    from repro.models.gnn import graphsage as sage_lib
+
+    feats, mask = gather_neighbors(h_src, nbr_idx, src_valid)
+    agg = masked_mean(feats, mask)
+    if self_h is None:
+        self_h = h_src[: nbr_idx.shape[0]]
+    return sage_lib.update(p, agg, self_h, relu=relu, dropout=0.0,
+                           seed=jnp.uint32(0))
+
+
+def _hash_u01(a, b, seed):
+    """The repo-wide u32 mix hash → uniform [0,1) f32, elementwise 2-D.
+
+    Same arithmetic as ``common.hash_uniform`` but over arbitrary 2-D
+    uint32 operands so vertex-keyed (LABOR) policies can reuse it.
+    """
+    h = (a.astype(jnp.uint32) * _MIX1) ^ (b.astype(jnp.uint32) * _MIX2)
+    h = h ^ seed.astype(jnp.uint32)
+    h = h ^ (h >> jnp.uint32(15))
+    h = h * _MIX1
+    h = h ^ (h >> jnp.uint32(13))
+    return (h >> jnp.uint32(8)).astype(jnp.float32) / jnp.float32(1 << 24)
+
+
+def sample_keys_ref(seed, nbr_vid, weights=None, *, policy="uniform"):
+    """Selection keys for the fanout draw; the f *smallest* keys win.
+
+    nbr_vid [n, W] candidate neighbor vids, -1 = out-of-row padding.
+    Returns [n, W] float32 keys, +inf on padded slots.
+
+    uniform  key = hash(row, slot)    — iid per slot (classic NS draw)
+    labor    key = hash(vid)          — one shared key per *vertex*, so
+             overlapping fanouts pick the same neighbors (LABOR-style
+             variance-zero correlated draw; marginal prob still f/deg)
+    cv       labor key / weight[slot] — weights ≥ 1 boost inclusion of
+             vertices with HEC-resident historical activations
+             (control-variate sampling, arxiv 1710.10568)
+    """
+    n, w = nbr_vid.shape
+    rows = jax.lax.broadcasted_iota(jnp.uint32, (n, w), 0)
+    cols = jax.lax.broadcasted_iota(jnp.uint32, (n, w), 1)
+    if policy == "uniform":
+        keys = _hash_u01(rows, cols, seed)
+    elif policy in ("labor", "cv"):
+        vid = jnp.maximum(nbr_vid, 0).astype(jnp.uint32)
+        keys = _hash_u01(vid, jnp.zeros_like(vid), seed)
+        if policy == "cv":
+            keys = keys / jnp.maximum(weights, 1e-6).astype(jnp.float32)
+    else:
+        raise ValueError(f"unknown sample policy: {policy!r}")
+    return jnp.where(nbr_vid >= 0, keys, jnp.inf)
 
 
 def gat_edge_ref(z, e_u, e_v, nbr_idx, src_valid):

@@ -84,6 +84,12 @@ class MinibatchPipeline:
     def num_ranks(self) -> int:
         return self.plan.ps.num_parts
 
+    def set_cv_residency(self, masks: Sequence[np.ndarray]) -> None:
+        """Refresh the cv sampler's per-rank HEC residency (see
+        ``SamplingPlan.set_cv_residency``); the trainer calls this at
+        each epoch boundary when ``sampler.policy == "cv"``."""
+        self.plan.set_cv_residency(masks)
+
     def batches(self, schedule: List[Sequence[np.ndarray]],
                 epoch: int) -> Iterator[dict]:
         """Pipeline an explicit ``schedule[step][rank]`` seed schedule."""

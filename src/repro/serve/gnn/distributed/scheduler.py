@@ -62,6 +62,7 @@ scheduler is bit-compatible with PR 4):
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from typing import List, Optional, Sequence
@@ -102,6 +103,10 @@ class DistServeConfig:
     hot_size: int = 0              # K: replicated hot-tier slots (0 = off)
     dedup: bool = False            # cross-query neighborhood dedup
     round_batch: int = 1           # rounds fused into one step/collective
+    fused_kernel: bool = False     # fused Pallas serve layer (graphsage
+    #                                only; off = composed jnp, byte-identical)
+    probe_kernel: bool = False     # batched Pallas HEC probe inside
+    #                                cache_fetch (off = jnp hec_lookup)
 
 
 def build_serve_data(ps: PartitionSet) -> dict:
@@ -167,7 +172,8 @@ class DistGNNServeScheduler(ServeFrontend):
                                          self.scfg.cache)
         self.router = QueryRouter(ps)
         self.engine = HaloExchangeEngine(self.num_ranks, cfg.num_layers,
-                                         push_limit=self.scfg.halo_slots)
+                                         push_limit=self.scfg.halo_slots,
+                                         probe_kernel=self.scfg.probe_kernel)
         # replicated hot tier over the plan's static hot set (hubs that
         # are halos somewhere); needs the normal cache machinery on.
         # Only the hot tables are derived — serving never consumes the
@@ -182,6 +188,8 @@ class DistGNNServeScheduler(ServeFrontend):
                     hot_vids, (self.num_ranks, len(hot_vids))))
                 self._hot_vid_p = self._hot_local_positions(hot_vids)
         self._init_frontend()
+        # fused Pallas serve layer — graphsage only, GAT keeps composed jnp
+        self._fused = bool(self.scfg.fused_kernel) and cfg.model == "graphsage"
         self._step = self._build_step()
         self._lookup = jax.jit(jax.vmap(
             lambda state, vids: hec_lib.hec_lookup(state, vids)))
@@ -234,7 +242,12 @@ class DistGNNServeScheduler(ServeFrontend):
         rounds = self.scfg.round_batch
         with_hot = self.hot is not None
         hot_layers = L if with_hot else 0
-        fwd = sage_lib.forward if cfg.model == "graphsage" else gat_lib.forward
+        if self._fused:
+            from repro.kernels import serve_fused
+            fwd = serve_fused.forward
+        else:
+            fwd = sage_lib.forward if cfg.model == "graphsage" \
+                else gat_lib.forward
 
         def stepf(params, states, tstates, data, mb):
             sq = lambda t: jax.tree_util.tree_map(lambda a: a[0], t)
@@ -596,8 +609,11 @@ class DistGNNServeScheduler(ServeFrontend):
             states = self.cache.states if self.scfg.cache.enabled \
                 else self.cache.init_states()
             tstates = self.hot.states if self.hot is not None else []
-            out, out_valid, new_states, new_t, stats = self._step(
-                self.params, states, tstates, self.data, mb)
+            step_span = (obs.span("kernel_serve_fused", rounds=NB)
+                         if self._fused else contextlib.nullcontext())
+            with step_span:
+                out, out_valid, new_states, new_t, stats = self._step(
+                    self.params, states, tstates, self.data, mb)
             out = np.asarray(out)
             out_valid = np.asarray(out_valid)
             stats = jax.tree_util.tree_map(np.asarray, stats)

@@ -30,9 +30,9 @@ import numpy as np
 
 from repro.cache import hec as hec_lib
 from repro.graph.partition import Partition
+from repro.kernels import ref
 from repro.models.gnn import gat as gat_lib
 from repro.models.gnn import graphsage as sage_lib
-from repro.models.gnn.common import gather_neighbors, masked_mean
 
 
 def serve_layer_dims(cfg) -> List[int]:
@@ -65,13 +65,14 @@ def full_neighbor_matrix(part: Partition,
 
 @functools.partial(jax.jit, static_argnames=("relu",))
 def _sage_chunk(p, h_all, dst, nbr, relu):
-    """h^{k+1} for one dst chunk: full-neighbor mean + the model's UPDATE."""
+    """h^{k+1} for one dst chunk: full-neighbor mean + the model's UPDATE.
+
+    Delegates to ``kernels.ref.serve_layer_ref`` — the one composed
+    serve-layer definition shared with the online schedulers' non-fused
+    path and the fused-kernel parity tests."""
     valid = jnp.ones(h_all.shape[0], bool)
-    feats, mask = gather_neighbors(h_all, nbr, valid)
-    agg = masked_mean(feats, mask)
     self_h = h_all[jnp.clip(dst, 0, h_all.shape[0] - 1)]
-    return sage_lib.update(p, agg, self_h, relu=relu, dropout=0.0,
-                           seed=jnp.uint32(0))
+    return ref.serve_layer_ref(p, h_all, nbr, valid, self_h, relu=relu)
 
 
 @jax.jit

@@ -44,6 +44,7 @@ every requesting query.  ``dedup_merged`` counts the slots saved.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import time
 from collections import deque
@@ -72,6 +73,8 @@ class GNNServeConfig:
     max_queue_depth: Optional[int] = None  # admission cap; None = unbounded
     dedup: bool = False            # cross-query dedup: same-vid queries in
     #                                a microbatch share ONE compute slot
+    fused_kernel: bool = False     # fused Pallas serve layer (graphsage
+    #                                only; off = composed jnp, byte-identical)
 
 
 class AdmissionRejected(RuntimeError):
@@ -181,6 +184,8 @@ class GNNServeScheduler(ServeFrontend):
                                   self.scfg.cache)
         self.queue: deque[GNNRequest] = deque()
         self._init_frontend()
+        # fused Pallas serve layer — graphsage only, GAT keeps composed jnp
+        self._fused = bool(self.scfg.fused_kernel) and cfg.model == "graphsage"
         self._step = self._build_step()
         self._lookup = jax.jit(
             lambda state, vids: hec_lib.hec_lookup(state, vids))
@@ -189,7 +194,12 @@ class GNNServeScheduler(ServeFrontend):
     def _build_step(self):
         cfg = self.cfg
         L = cfg.num_layers
-        fwd = sage_lib.forward if cfg.model == "graphsage" else gat_lib.forward
+        if self._fused:
+            from repro.kernels import serve_fused
+            fwd = serve_fused.forward
+        else:
+            fwd = sage_lib.forward if cfg.model == "graphsage" \
+                else gat_lib.forward
 
         def stepf(params, states, features, mb):
             nodes0 = mb["layer_nodes"][0]
@@ -380,8 +390,11 @@ class GNNServeScheduler(ServeFrontend):
                 # baseline mode: every microbatch sees an empty cache, so
                 # "disabled" really is pure on-demand sampling + compute
                 states = self.cache.init_states()
-            out, out_valid, new_states, stats = self._step(
-                self.params, states, self.features, mb)
+            step_span = (obs.span("kernel_serve_fused", slots=len(groups))
+                         if self._fused else contextlib.nullcontext())
+            with step_span:
+                out, out_valid, new_states, stats = self._step(
+                    self.params, states, self.features, mb)
             out = np.asarray(out)
             out_valid = np.asarray(out_valid)
             self.cache.record(np.asarray(stats["hits"]),

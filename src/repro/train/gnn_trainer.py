@@ -500,8 +500,18 @@ class DistTrainer:
             if (reg.enabled or health) else None
         guard = health.guard("train_step_loop") if health \
             else contextlib.nullcontext()
+        s_policy = cfg.pipeline.sampler.policy
         with guard:
             for ep in range(num_epochs):
+                if (pipeline is not None and s_policy == "cv"
+                        and cfg.pipeline.sampler.device_draw):
+                    # control-variate sampling: refresh the per-rank HEC
+                    # residency the cv draw weights read — vertices with a
+                    # live historical activation get preferred at sample
+                    # time (arxiv 1710.10568), and the set tracked here is
+                    # exactly what the epoch's lookups can hit
+                    pipeline.set_cv_residency(
+                        self._cv_residency(ps, state))
                 if pipeline is not None:
                     mb_iter = pipeline.epoch_batches(ep)
                 else:
@@ -531,8 +541,14 @@ class DistTrainer:
                                                        rank_stats))
                     step_idx += 1
                 mean = _epoch_mean(ep_metrics)
+                # annotate which fanout-draw policy produced the epoch so
+                # downstream consumers (history rows, the labeled counter)
+                # can attribute convergence/perf deltas to the sampler
+                mean["sampler_policy"] = s_policy
                 wall = time.perf_counter() - wall0
                 if reg.enabled:
+                    reg.counter("train_epochs_total",
+                                sampler_policy=s_policy).inc()
                     # per-epoch phase seconds (sample/host_prep run on the
                     # prefetch workers, so an epoch is credited with
                     # whatever preparation completed during it — exact at
@@ -577,6 +593,25 @@ class DistTrainer:
                           f"acc={mean['acc']:.3f} hit-rates {' '.join(hl)}")
         state["step"] = jnp.asarray(step_idx, jnp.int32)
         return state, history
+
+    def _cv_residency(self, ps, state):
+        """Per-rank bool masks over VID_p: vertices with a live line in
+        ANY layer of that rank's training HEC (tags hold VID_o).  This is
+        the control-variate sampler's weight source — one host read of
+        the tag tensors per epoch, no device-step change."""
+        R = self.num_ranks
+        V = sum(p.num_solid for p in ps.parts)
+        res_o = np.zeros((R, V), bool)
+        for st in state["hec"]:
+            tags = np.asarray(st.tags)            # [R, nsets, ways] VID_o
+            for r in range(R):
+                t = tags[r][tags[r] >= 0]
+                res_o[r, t[t < V]] = True
+        masks = []
+        for r, p in enumerate(ps.parts):
+            vid_o = np.clip(p.vid_p_to_o(), 0, V - 1)
+            masks.append(res_o[r, vid_o])
+        return masks
 
     def audit(self, ps, dist_data, state, epoch: int = 0):
         """Online exactness audit: sample cached lines from each training

@@ -116,3 +116,200 @@ def test_hec_search_kernel_matches_core(cs, ways, n):
     np.testing.assert_array_equal(
         np.asarray(jnp.where(hit_r, way_r, 0)),
         np.asarray(jnp.where(hit_k, way_k, 0)))
+
+
+# ---------------------------------------------------------------------------
+# PR 9: fused serve layer / batched HEC probe / device fanout draw
+# ---------------------------------------------------------------------------
+def _serve_inputs(M, f, D, K, N, seed=0):
+    ks = jax.random.split(jax.random.key(seed), 5)
+    h = jax.random.normal(ks[0], (N, D))
+    nbr = jax.random.randint(ks[1], (M, f), -1, N)
+    valid = jax.random.bernoulli(ks[2], 0.85, (N,))
+    wn = jax.random.normal(ks[3], (D, K)) * 0.1
+    ws = jax.random.normal(ks[4], (D, K)) * 0.1
+    b = jnp.linspace(-1.0, 1.0, K, dtype=jnp.float32)
+    return h, nbr, valid, wn, ws, b
+
+
+@pytest.mark.parametrize("M,f,D,K,N", [(64, 8, 32, 32, 128),
+                                       (200, 5, 48, 64, 333),
+                                       (128, 1, 16, 16, 128)])
+@pytest.mark.parametrize("relu", [True, False])
+def test_fused_serve_layer_bitmatches_composed(M, f, D, K, N, relu):
+    """The fused serve kernel is BIT-exact vs the composed jnp layer (the
+    knob-on parity contract in ISSUE 9)."""
+    h, nbr, valid, wn, ws, b = _serve_inputs(M, f, D, K, N, seed=M + K)
+    out = ops.fused_serve_layer(h, nbr, valid, wn, ws, b, relu=relu)
+    exp = ref.serve_layer_ref({"wn": wn, "ws": ws, "b": b}, h, nbr, valid,
+                              relu=relu)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+
+
+def test_fused_serve_layer_masked_rows():
+    """All -1 rows and rows whose every neighbor is invalid aggregate to
+    zero (self-term + bias only), exactly like the composed path."""
+    h, _, _, wn, ws, b = _serve_inputs(8, 4, 16, 16, 32, seed=5)
+    nbr = jnp.full((8, 4), -1, jnp.int32)
+    nbr = nbr.at[1].set(jnp.asarray([3, 7, 2, 9]))    # one live row
+    valid = jnp.zeros(32, bool).at[jnp.asarray([3, 7])].set(True)
+    out = ops.fused_serve_layer(h, nbr, valid, wn, ws, b, relu=False)
+    exp = ref.serve_layer_ref({"wn": wn, "ws": ws, "b": b}, h, nbr, valid,
+                              relu=False)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+    # all-masked row == pure self/bias row of the reference
+    agg0 = jnp.zeros((8, 16))
+    pure = agg0 @ wn + h[:8] @ ws + b
+    np.testing.assert_allclose(np.asarray(out[0]), np.asarray(pure[0]),
+                               atol=1e-6)
+
+
+def test_serve_fused_forward_matches_graphsage():
+    """L-layer fused forward == graphsage.forward (dropout off)."""
+    from repro.kernels import serve_fused
+    from repro.models.gnn import graphsage
+    D, hid, f = 16, 24, 4
+    params = {"layers": [
+        {"wn": jax.random.normal(jax.random.key(1), (D, hid)) * 0.1,
+         "ws": jax.random.normal(jax.random.key(2), (D, hid)) * 0.1,
+         "b": jnp.zeros((hid,), jnp.float32)},
+        {"wn": jax.random.normal(jax.random.key(3), (hid, 8)) * 0.1,
+         "ws": jax.random.normal(jax.random.key(4), (hid, 8)) * 0.1,
+         "b": jnp.zeros((8,), jnp.float32)}]}
+    N1, N0 = 20, 60
+    h0 = jax.random.normal(jax.random.key(5), (N0, D))
+    valid0 = jax.random.bernoulli(jax.random.key(6), 0.9, (N0,))
+    blocks = {"nbr_idx": [
+        jax.random.randint(jax.random.key(7), (N1, f), -1, N0),
+        jax.random.randint(jax.random.key(8), (8, f), -1, N1)]}
+    out_f, val_f = serve_fused.forward(params, h0, valid0, blocks)
+    out_c, val_c = graphsage.forward(params, h0, valid0, blocks,
+                                     dropout=0.0, seed=jnp.uint32(0))
+    np.testing.assert_array_equal(np.asarray(out_f), np.asarray(out_c))
+    np.testing.assert_array_equal(np.asarray(val_f), np.asarray(val_c))
+
+
+@pytest.mark.parametrize("cs,ways,B,n", [(64, 4, 3, 40), (256, 8, 1, 100),
+                                         (512, 4, 6, 17)])
+def test_hec_search_batched_matches_singles(cs, ways, B, n):
+    """Each row of the batched probe == a single hec_search_kernel call."""
+    from repro.cache import hec as H
+    from repro.kernels.hec_search import hec_search_batched, hec_search_kernel
+    rng = np.random.default_rng(cs + B)
+    s = H.hec_init(cs, ways, 4)
+    stored = jnp.asarray(rng.integers(0, 10 * cs, cs // 2), jnp.int32)
+    s = H.hec_store(s, stored, jnp.ones((len(stored), 4)))
+    vids = jnp.asarray(rng.integers(-1, 10 * cs, (B, n)), jnp.int32)
+    hit_b, set_b, way_b = hec_search_batched(s.tags, vids)
+    for i in range(B):
+        hit_1, set_1, way_1 = hec_search_kernel(s.tags, vids[i])
+        np.testing.assert_array_equal(np.asarray(hit_b[i]),
+                                      np.asarray(hit_1))
+        np.testing.assert_array_equal(np.asarray(set_b[i]),
+                                      np.asarray(set_1))
+        np.testing.assert_array_equal(np.asarray(way_b[i]),
+                                      np.asarray(way_1))
+
+
+def test_hec_probe_matches_hec_lookup():
+    """hec_probe rows are bit-identical to hec_lookup on each round
+    (the cache_fetch(rounds=N) contract of ISSUE 9)."""
+    from repro.cache import hec as H
+    from repro.kernels.hec_search import hec_probe
+    rng = np.random.default_rng(11)
+    s = H.hec_init(256, 4, 8)
+    stored = jnp.asarray(rng.integers(0, 2000, 128), jnp.int32)
+    s = H.hec_store(s, stored,
+                    jnp.asarray(rng.normal(size=(128, 8)), jnp.float32))
+    vids = jnp.asarray(rng.integers(-1, 2000, (5, 33)), jnp.int32)
+    hit_p, emb_p = hec_probe(s, vids)
+    for i in range(5):
+        hit_l, emb_l = H.hec_lookup(s, vids[i])
+        np.testing.assert_array_equal(np.asarray(hit_p[i]),
+                                      np.asarray(hit_l))
+        np.testing.assert_array_equal(np.asarray(emb_p[i]),
+                                      np.asarray(emb_l))
+
+
+@pytest.mark.parametrize("policy", ["uniform", "labor", "cv"])
+def test_sample_keys_kernel_matches_ref(policy):
+    """Pallas selection-key kernel bit-matches the jnp oracle for every
+    policy, including +inf on padded (-1) slots."""
+    rng = np.random.default_rng(3)
+    nbr = jnp.asarray(rng.integers(-1, 500, (37, 13)), jnp.int32)
+    w = jnp.asarray(1.0 + 4.0 * rng.random((37, 13)), jnp.float32)
+    seed = jnp.uint32(0xABCD1234)
+    out = ops.sample_keys_kernel(seed, nbr, w, policy=policy)
+    exp = ref.sample_keys_ref(seed, nbr, w, policy=policy)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+    assert bool(jnp.isinf(out[nbr < 0]).all())
+
+
+def _tiny_csr():
+    # 6 solid vertices; degrees 2,8,0,1,3,5 over vids 0..13 (8 halos)
+    indptr = np.array([0, 2, 10, 10, 11, 14, 19], np.int64)
+    indices = np.array([7, 1, 0, 2, 3, 4, 5, 6, 8, 9, 13,
+                        2, 10, 11, 1, 3, 6, 12, 13], np.int64)
+    return indptr, indices
+
+
+@pytest.mark.parametrize("policy", ["uniform", "labor", "cv"])
+def test_draw_neighbors_device_edges(policy):
+    """Take-all rows stay in CSR order; halo/pad/deg-0 rows are all -1;
+    sampled rows draw exactly f in-row neighbors without replacement."""
+    from repro.kernels.sample_draw import draw_neighbors_device
+    indptr, indices = _tiny_csr()
+    f, num_solid = 4, 6
+    wtab = jnp.ones((14,), jnp.float32)
+    cur = jnp.asarray([0, 1, 2, 3, 4, 5, -1, 9], jnp.int32)  # 9 = halo
+    out = np.asarray(draw_neighbors_device(
+        jnp.asarray(indptr, jnp.int32), jnp.asarray(indices, jnp.int32),
+        wtab, cur, jnp.uint32(42), None, f=f, num_solid=num_solid,
+        width=8, policy=policy))
+    # deg<=f rows keep every neighbor, CSR order, left-packed
+    np.testing.assert_array_equal(out[0], [7, 1, -1, -1])
+    np.testing.assert_array_equal(out[2], [-1] * f)          # deg 0
+    np.testing.assert_array_equal(out[3], [13, -1, -1, -1])
+    np.testing.assert_array_equal(out[4], [2, 10, 11, -1])
+    np.testing.assert_array_equal(out[6], [-1] * f)          # cur = -1
+    np.testing.assert_array_equal(out[7], [-1] * f)          # halo row
+    # deg>f rows: f distinct picks, all from that row's CSR slice
+    for r, lo, hi in [(1, 2, 10), (5, 14, 19)]:
+        picks = out[r]
+        assert len(set(picks.tolist())) == f
+        assert set(picks.tolist()) <= set(indices[lo:hi].tolist())
+
+
+def test_draw_neighbors_device_kernel_matches_jnp_ref():
+    """use_kernel=True and use_kernel=False draw identical neighbors
+    (the Pallas key kernel and the jnp oracle are bit-equal)."""
+    from repro.kernels.sample_draw import draw_neighbors_device
+    rng = np.random.default_rng(9)
+    nv = 60
+    deg = rng.integers(0, 12, nv)
+    indptr = np.zeros(nv + 1, np.int64)
+    indptr[1:] = np.cumsum(deg)
+    indices = rng.integers(0, nv + 20, indptr[-1])
+    wtab = jnp.asarray(1.0 + rng.random(nv + 20), jnp.float32)
+    cur = jnp.asarray(rng.integers(-1, nv + 10, 40), jnp.int32)
+    for policy in ("uniform", "labor", "cv"):
+        outs = [np.asarray(draw_neighbors_device(
+            jnp.asarray(indptr, jnp.int32), jnp.asarray(indices, jnp.int32),
+            wtab, cur, jnp.uint32(7), None, f=5, num_solid=nv,
+            width=int(deg.max()), policy=policy, use_kernel=uk))
+            for uk in (True, False)]
+        np.testing.assert_array_equal(outs[0], outs[1])
+
+
+def test_draw_neighbors_device_width_narrower_than_fanout():
+    """width < f widens the candidate matrix with -1 pads instead of
+    failing in top_k."""
+    from repro.kernels.sample_draw import draw_neighbors_device
+    indptr = jnp.asarray([0, 2, 3], jnp.int32)
+    indices = jnp.asarray([5, 1, 0], jnp.int32)
+    out = np.asarray(draw_neighbors_device(
+        indptr, indices, jnp.ones((6,), jnp.float32),
+        jnp.asarray([0, 1], jnp.int32), jnp.uint32(1), None,
+        f=4, num_solid=2, width=2, policy="uniform"))
+    np.testing.assert_array_equal(out[0], [5, 1, -1, -1])
+    np.testing.assert_array_equal(out[1], [0, -1, -1, -1])
