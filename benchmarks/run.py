@@ -15,6 +15,7 @@ Prints ``name,us_per_call,derived`` CSV lines.
   obs    bench_obs          tracing overhead gate (<10%) + TRACE_obs.json
   quality bench_quality     staleness sweep: epoch time vs accuracy vs audit err
   kernels bench_kernels     fused serve / batched probe / device draw kernels
+  resilience bench_resilience ckpt save/restore, degraded serving, recovery
 
 ``--smoke`` runs every registered benchmark at tiny scale (a CI bit-rot
 guard: each suite must still execute end-to-end, numbers are meaningless —
@@ -48,8 +49,8 @@ def main() -> None:
     from benchmarks import (bench_comm, bench_convergence, bench_distdgl,
                             bench_gnn_serve, bench_gnn_serve_dist, bench_hec,
                             bench_kernels, bench_obs, bench_pipeline,
-                            bench_quality, bench_scaling, bench_update,
-                            roofline)
+                            bench_quality, bench_resilience, bench_scaling,
+                            bench_update, roofline)
     suites = {
         "fig2_update": bench_update.main,
         "fig3_fig4_scaling": bench_scaling.main,
@@ -64,6 +65,7 @@ def main() -> None:
         "obs": bench_obs.main,
         "quality": bench_quality.main,
         "kernels": bench_kernels.main,
+        "resilience": bench_resilience.main,
     }
     print("name,us_per_call,derived")
     try:

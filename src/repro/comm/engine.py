@@ -244,16 +244,38 @@ class HaloExchangeEngine:
         return rec_tags, rec_embs, rec_hot_tags, rec_hot_embs
 
     def aep_push(self, data, mb, captured, vid_o_nodes, num_solid, inflight,
-                 seed, dims, dmax, me):
+                 seed, dims, dmax, me, fault_code=None):
         """Select + fused-push + enqueue; returns ``(inflight, stats)``.
 
         ``stats['push_rows']`` / ``stats['push_bytes']`` measure the
         payload this step dispatched behind the backward pass (the
         overlap metrics surfaced by the trainer/examples); with a hot
         budget, ``stats['hot_push_rows']`` counts the broadcast-segment
-        rows riding the same collective."""
+        rows riding the same collective.
+
+        ``fault_code`` (a traced int32 scalar) arms the resilience path:
+        non-finite payload rows are filtered BEFORE dispatch (NaN
+        containment — a locally poisoned step never pollutes remote
+        HECs), then the scheduled wire faults apply AFTER the filter:
+        bit ``CODE_DROP_PUSH`` drops this rank's outgoing payload
+        (tags -> -1), bit ``CODE_CORRUPT_PUSH`` corrupts the payload to
+        NaN with tags intact, so the garbage lands in remote HEC lines
+        and downstream steps must be contained by the step guard.  A
+        zero code computes identical bits to ``fault_code=None``."""
+        from repro.resilience.inject import (CODE_CORRUPT_PUSH,
+                                             CODE_DROP_PUSH)
         tags, embs = self.select_push(data, mb, captured, vid_o_nodes,
                                       num_solid, seed, dims, dmax, me)
+        if fault_code is not None:
+            rowok = jnp.isfinite(embs).all(axis=-1)       # [R, L, nc]
+            tags = jnp.where(rowok, tags, -1)
+            embs = jnp.where(rowok[..., None], embs, 0.0)
+            drop = (fault_code & CODE_DROP_PUSH) != 0
+            corrupt = (fault_code & CODE_CORRUPT_PUSH) != 0
+            embs = jnp.where(corrupt & (tags >= 0)[..., None],
+                             jnp.float32(jnp.nan), embs)
+            tags = jnp.where(drop, -1, tags)
+            embs = jnp.where(drop, 0.0, embs)
         rows = (tags >= 0).sum()
         nbytes = jnp.zeros((), jnp.float32)
         for l in range(self.num_layers):
@@ -264,6 +286,12 @@ class HaloExchangeEngine:
             h_tags, h_embs = self.select_hot_push(
                 data, mb, captured, vid_o_nodes, num_solid, seed, dims,
                 dmax, me)
+            if fault_code is not None:
+                # NaN containment for the broadcast segment too (wire
+                # faults target only the pairwise payload)
+                h_ok = jnp.isfinite(h_embs).all(axis=-1)  # [L, hb]
+                h_tags = jnp.where(h_ok, h_tags, -1)
+                h_embs = jnp.where(h_ok[..., None], h_embs, 0.0)
             rec_tags, rec_embs, rec_ht, rec_he = self.push(
                 tags, embs, hot=(h_tags, h_embs))
             hot_rows = (h_tags >= 0).sum() * (self.num_ranks - 1)
@@ -342,10 +370,19 @@ class HaloExchangeEngine:
 
     # -- serve-side cache fetch (device, inside shard_map) ----------------------
     def cache_fetch(self, state, vids_o, owner, need, h,
-                    slots: Optional[int] = None, rounds: int = 1):
+                    slots: Optional[int] = None, rounds: int = 1,
+                    alive=None):
         """One all_to_all request/response pair answering the ``need`` rows
         from the owners' layer-k caches.  Returns the substituted ``h``,
         the rows answered, and how many rows actually traveled.
+
+        ``alive`` (a traced ``[R]`` bool, replicated) is the degraded-mode
+        health mask: requests to a dead owner are suppressed (the row
+        falls through to the caller's validity-mask drop path — or to a
+        stale hot-tier/HEC replica if one substituted earlier) and a dead
+        rank's responder side answers nothing, modeling the unresponsive
+        peer.  ``alive=None`` or all-True computes identical bits to the
+        unmasked fetch.
 
         ``rounds=N`` fuses N queued serve rounds into this ONE collective
         pair: the request buffer grows to ``[R, N * slots]`` — the N
@@ -366,7 +403,10 @@ class HaloExchangeEngine:
         prio = jnp.arange(N, 0, -1).astype(jnp.float32)
         req_rows, pos_rows = [], []
         for j in range(R):
-            score = jnp.where(need & (owner == j), prio, -1.0)
+            want = need & (owner == j)
+            if alive is not None:
+                want = want & alive[j]
+            score = jnp.where(want, prio, -1.0)
             topv, topi = jax.lax.top_k(score, nslots)
             ok = topv > 0
             req_rows.append(jnp.where(ok, vids_o[topi], -1))
@@ -383,6 +423,9 @@ class HaloExchangeEngine:
             own, vals = hec_lib.hec_lookup(state, got_req.reshape(-1))
             own = own.reshape(R, nslots)
             vals = vals.reshape(R, nslots, d)
+        if alive is not None:
+            # a dead rank answers nothing (responder side of the mask)
+            own = own & alive[jax.lax.axis_index(self.axis)]
         resp = jax.lax.all_to_all(
             jnp.concatenate(
                 [vals.astype(jnp.float32),

@@ -85,15 +85,51 @@ def run_gnn(args):
     quality = obs.QualityPlane(
         obs.QualityConfig(audit_interval=args.audit_interval),
         health=health, prom=prom)
+    # resilience plane: epoch-boundary checkpoints (+--resume), the
+    # deterministic fault injector, and the NaN/Inf step guard.  With no
+    # resilience flag set `rz` stays None and the trainer compiles the
+    # exact unarmed step — byte-identical to a pre-resilience run.
+    rz = None
+    if (args.ckpt_dir or args.fault_schedule or args.nan_guard):
+        from repro import resilience
+        schedule = (resilience.FaultSchedule.from_json(args.fault_schedule)
+                    if args.fault_schedule else None)
+        rz = resilience.ResiliencePlane(resilience.ResilienceConfig(
+            ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+            ckpt_keep=args.ckpt_keep, nan_guard=args.nan_guard,
+            schedule=schedule, flight_dir=args.flight_dir))
+        if schedule is not None:
+            print(f"fault schedule: {len(schedule.specs)} scheduled faults")
     tr = DistTrainer(cfg=cfg, mesh=mesh, num_ranks=args.ranks,
-                     mode=args.mode, health=health, quality=quality)
+                     mode=args.mode, health=health, quality=quality,
+                     resilience=rz)
     state = tr.init_state(jax.random.key(args.seed))
+    start_epoch = 0
+    if args.resume:
+        if rz is None or rz.ckpt is None:
+            raise SystemExit("--resume requires --ckpt-dir")
+        state, saved_epoch = rz.ckpt.restore(state)
+        start_epoch = saved_epoch + 1
+        print(f"resumed from epoch {saved_epoch} "
+              f"(step {int(state['step'])}); continuing at {start_epoch}")
+    remaining = args.epochs - start_epoch
+    if remaining <= 0:
+        raise SystemExit(f"nothing to train: checkpoint already covers "
+                         f"{start_epoch}/{args.epochs} epochs")
     t0 = time.time()
-    state, hist = tr.train_epochs(ps, dd, state, args.epochs, log_every=1)
+    state, hist = tr.train_epochs(ps, dd, state, remaining, log_every=1,
+                                  start_epoch=start_epoch)
     dt = time.time() - t0
     acc = tr.evaluate(ps, dd, state)
-    print(f"done: {args.epochs} epochs in {dt:.1f}s "
-          f"({dt/args.epochs:.2f}s/epoch); test_acc={acc:.3f}")
+    print(f"done: {remaining} epochs in {dt:.1f}s "
+          f"({dt/remaining:.2f}s/epoch); test_acc={acc:.3f}")
+    if rz is not None:
+        print(f"resilience: faults_injected={len(rz.events)} "
+              f"skipped_steps={rz.skipped_steps} "
+              f"prefetch_retries="
+              f"{int(obs.get().registry.value('prefetch_retries'))}")
+        # flight paths print below via the health summary (finalize
+        # routes FLIGHT_resilience.json through the health recorder)
     hs = health.summary()
     fmt = lambda v: "n/a" if v is None else f"{v:.3f}"
     print(f"health: halo skew={fmt(hs['skew'])} "
@@ -187,6 +223,25 @@ def main():
     g.add_argument("--hec-ls", type=int, default=2)
     g.add_argument("--hec-delay", type=int, default=1)
     g.add_argument("--ckpt", default=None)
+    g.add_argument("--ckpt-dir", default=None, metavar="DIR",
+                   help="stateful crash-resume: write a full training "
+                        "checkpoint (params, opt, HEC, hot tier, inflight "
+                        "pushes, RNG position) at epoch boundaries")
+    g.add_argument("--ckpt-every", type=int, default=1, metavar="N",
+                   help="checkpoint every N epochs (with --ckpt-dir)")
+    g.add_argument("--ckpt-keep", type=int, default=3, metavar="K",
+                   help="retain the newest K checkpoints (with --ckpt-dir)")
+    g.add_argument("--resume", action="store_true",
+                   help="restore the latest checkpoint in --ckpt-dir and "
+                        "continue; the resumed run is bit-identical to one "
+                        "that never crashed")
+    g.add_argument("--fault-schedule", default=None, metavar="JSON",
+                   help="deterministic fault injection: a JSON list of "
+                        "{kind, epoch, step, rank} specs (kinds: nan_step, "
+                        "drop_push, corrupt_push, delay_rank, kill_prefetch)")
+    g.add_argument("--nan-guard", action="store_true",
+                   help="skip minibatches whose loss/grads go non-finite "
+                        "(counted as resilience_skipped_steps)")
     g.add_argument("--trace-out", default=None, metavar="PATH",
                    help="write a Chrome trace-event JSON of the phase spans")
     g.add_argument("--metrics-out", default=None, metavar="PATH",

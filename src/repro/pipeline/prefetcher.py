@@ -18,7 +18,7 @@ from __future__ import annotations
 import collections
 import concurrent.futures
 import dataclasses
-from typing import Callable, Iterator, List, Sequence
+from typing import Callable, Iterator, List, Optional, Sequence
 
 import numpy as np
 
@@ -42,6 +42,10 @@ class SamplingPlan:
     ps: PartitionSet
     cfg: GNNConfig
     base_seed: int = 0
+    # resilience fault injector (repro.resilience.FaultInjector): lets a
+    # scheduled kill_prefetch fault crash the worker drawing an exact
+    # (epoch, step) — exercised by the prefetch retry path below
+    injector: Optional[object] = None
 
     def epoch_schedule(self, epoch: int) -> List[List[np.ndarray]]:
         """``schedule[step][rank]`` -> seed VID_p array (empty when padded)."""
@@ -78,6 +82,10 @@ class SamplingPlan:
                     seed_lists: Sequence[np.ndarray]) -> dict:
         """One synchronized [R, ...] host minibatch for ``(epoch, step)``."""
         cfg = self.cfg
+        if self.injector is not None:
+            # raises PrefetchWorkerKilled exactly once per scheduled
+            # fault — the retry of the same (epoch, step) then succeeds
+            self.injector.prefetch_crash(epoch, step)
         rng = self.step_rng(epoch, step)
         sampler = (sample_blocks_vectorized if cfg.pipeline.vectorized
                    else sample_blocks)
@@ -112,6 +120,12 @@ def prefetch(make_fn: Callable[[int], dict], num_steps: int,
     results are consumed strictly in step order; because each step owns its
     RNG stream (see ``SamplingPlan``), the output sequence is identical for
     any worker count.
+
+    Worker-crash containment: a worker exception only surfaces here, when
+    its future is consumed mid-epoch.  The step's draw is retried ONCE,
+    inline — deterministic per-step RNG makes the retry produce the exact
+    batch the dead worker would have — counted as ``prefetch_retries`` in
+    the registry; a second failure propagates (a real bug, not a flake).
     """
     if num_workers <= 0:
         for step in range(num_steps):
@@ -124,12 +138,17 @@ def prefetch(make_fn: Callable[[int], dict], num_steps: int,
         inflight = collections.deque()
         nxt = 0
         while nxt < num_steps and len(inflight) < depth:
-            inflight.append(pool.submit(make_fn, nxt))
+            inflight.append((nxt, pool.submit(make_fn, nxt)))
             nxt += 1
         while inflight:
-            batch = inflight.popleft().result()
+            step, fut = inflight.popleft()
+            try:
+                batch = fut.result()
+            except Exception:
+                obs.count("prefetch_retries")
+                batch = make_fn(step)
             if nxt < num_steps:
-                inflight.append(pool.submit(make_fn, nxt))
+                inflight.append((nxt, pool.submit(make_fn, nxt)))
                 nxt += 1
             yield batch
     finally:

@@ -71,10 +71,11 @@ class MinibatchPipeline:
     """
 
     def __init__(self, ps: PartitionSet, cfg: GNNConfig, base_seed: int = 0,
-                 mesh=None):
+                 mesh=None, injector=None):
         self.cfg = cfg
         self.pcfg = cfg.pipeline
-        self.plan = SamplingPlan(ps=ps, cfg=cfg, base_seed=base_seed)
+        self.plan = SamplingPlan(ps=ps, cfg=cfg, base_seed=base_seed,
+                                 injector=injector)
         self.sharding = None
         if mesh is not None:
             from jax.sharding import NamedSharding, PartitionSpec

@@ -1,0 +1,33 @@
+"""Resilience plane: deterministic fault injection, stateful
+crash-resume, and degraded-mode serving failover.
+
+Three pieces, all default-off and bit-compatible off:
+
+* :mod:`repro.resilience.inject` — a config-scheduled, seeded fault
+  injector that lands payload corruption/drops, NaN poisoning, rank
+  delays, and prefetch-worker kills at exact ``(epoch, step, rank)``
+  coordinates, so every chaos run replays bit for bit.
+* :mod:`repro.resilience.checkpoint` — atomic epoch-boundary checkpoints
+  of the full train state (params, opt state, HEC, hot tier, inflight
+  push queue); kill → restore → continue is bit-identical to the
+  uninterrupted run because sampling is a pure function of
+  ``(base_seed, epoch, step)``.
+* :mod:`repro.resilience.failover` — the per-rank circuit breaker behind
+  ``DistServeConfig(failover=True)``: a marked-dead rank's halo traffic
+  is suppressed (falling back to the validity-mask drop path and stale
+  HEC/hot-tier replicas) until it passes a timed re-probe.
+
+:class:`ResiliencePlane` (``DistTrainer(resilience=...)``) coordinates
+the trainer side: fault codes per step, the NaN/Inf step guard's
+``resilience_skipped_steps`` accounting, epoch checkpoints, and the
+``FLIGHT_resilience.json`` dump through the PR 7 flight contract.
+"""
+from repro.resilience.checkpoint import CheckpointManager  # noqa: F401
+from repro.resilience.failover import (RankHealthMask,  # noqa: F401
+                                       probe_with_timeout)
+from repro.resilience.inject import (CODE_CORRUPT_PUSH,  # noqa: F401
+                                     CODE_DROP_PUSH, CODE_NAN_STEP,
+                                     FaultInjector, FaultSchedule,
+                                     FaultSpec, PrefetchWorkerKilled)
+from repro.resilience.plane import (ResilienceConfig,  # noqa: F401
+                                    ResiliencePlane)

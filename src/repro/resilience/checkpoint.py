@@ -1,0 +1,103 @@
+"""Epoch-boundary checkpoint manager for the full distributed train state.
+
+One checkpoint = one atomic ``.npz`` carrying the *entire* ``DistTrainer``
+state pytree — params, opt state, every layer's HEC, the hot tier, and
+the delay-d inflight push queue — plus the epoch index.  The sampler
+needs no extra state: every minibatch is a pure function of
+``(base_seed, epoch, step)``, so "sampler RNG position" is just the
+epoch number the run resumes from.  Restoring a checkpoint written after
+epoch ``k`` and continuing with ``start_epoch=k+1`` is therefore
+bit-identical to the uninterrupted run.
+
+Layout under ``ckpt_dir``::
+
+    ckpt_ep00003.npz   flat-npz state archive (train.checkpoint format)
+    LATEST             text file: "ckpt_ep00003.npz 3"
+
+Both the archive and the ``LATEST`` pointer are written tmp+``os.replace``,
+so a crash mid-save leaves the previous checkpoint intact and pointed-to.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Optional, Tuple
+
+from repro.train import checkpoint as ckpt_lib
+
+_CKPT_RE = re.compile(r"^ckpt_ep(\d+)\.npz$")
+
+
+class CheckpointManager:
+    def __init__(self, ckpt_dir: str, every: int = 1, keep: int = 3):
+        if every < 1:
+            raise ValueError("ckpt every must be >= 1")
+        self.ckpt_dir = ckpt_dir
+        self.every = every
+        self.keep = keep
+        os.makedirs(ckpt_dir, exist_ok=True)
+
+    def path_for(self, epoch: int) -> str:
+        return os.path.join(self.ckpt_dir, f"ckpt_ep{epoch:05d}.npz")
+
+    def should_save(self, epoch: int) -> bool:
+        return (epoch + 1) % self.every == 0
+
+    def save(self, state, epoch: int) -> str:
+        path = ckpt_lib.save(self.path_for(epoch), state, step=epoch)
+        latest = os.path.join(self.ckpt_dir, "LATEST")
+        tmp = latest + ".tmp"
+        with open(tmp, "w") as f:
+            f.write(f"{os.path.basename(path)} {epoch}\n")
+        os.replace(tmp, latest)
+        self._prune()
+        return path
+
+    def latest(self) -> Optional[Tuple[str, int]]:
+        """``(path, epoch)`` of the newest checkpoint, or ``None``."""
+        latest = os.path.join(self.ckpt_dir, "LATEST")
+        if os.path.exists(latest):
+            with open(latest) as f:
+                name, epoch = f.read().split()
+            path = os.path.join(self.ckpt_dir, name)
+            if os.path.exists(path):
+                return path, int(epoch)
+        # fall back to a directory scan (LATEST lost or stale)
+        best = None
+        for name in os.listdir(self.ckpt_dir):
+            m = _CKPT_RE.match(name)
+            if m:
+                ep = int(m.group(1))
+                if best is None or ep > best[1]:
+                    best = (os.path.join(self.ckpt_dir, name), ep)
+        return best
+
+    def restore(self, like_state) -> Tuple[object, int]:
+        """Restore the newest checkpoint into ``like_state``'s structure.
+
+        Returns ``(state, epoch)`` where ``epoch`` is the epoch the
+        checkpoint was written after — resume with ``start_epoch =
+        epoch + 1``.  Raises ``FileNotFoundError`` if the directory has
+        no checkpoint, ``CheckpointMismatchError`` on structure drift.
+        """
+        got = self.latest()
+        if got is None:
+            raise FileNotFoundError(
+                f"no checkpoint found under {self.ckpt_dir}")
+        path, epoch = got
+        state, saved_epoch = ckpt_lib.restore(path, like_state)
+        return state, saved_epoch
+
+    def _prune(self) -> None:
+        if self.keep < 1:
+            return
+        found = []
+        for name in os.listdir(self.ckpt_dir):
+            m = _CKPT_RE.match(name)
+            if m:
+                found.append((int(m.group(1)), name))
+        for _, name in sorted(found)[:-self.keep]:
+            try:
+                os.remove(os.path.join(self.ckpt_dir, name))
+            except OSError:
+                pass

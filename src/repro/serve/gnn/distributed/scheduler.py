@@ -84,6 +84,7 @@ from repro.models.gnn import graphsage as sage_lib
 from repro.pipeline.vectorized_sampler import (concat_blocks,
                                                sample_blocks_vectorized,
                                                stack_ranks)
+from repro.resilience.failover import RankHealthMask
 from repro.serve.gnn.distributed.router import QueryRouter
 from repro.serve.gnn.distributed.sharded_cache import ShardedServingCache
 from repro.serve.gnn.embedding_cache import ServeCacheConfig
@@ -107,6 +108,14 @@ class DistServeConfig:
     #                                only; off = composed jnp, byte-identical)
     probe_kernel: bool = False     # batched Pallas HEC probe inside
     #                                cache_fetch (off = jnp hec_lookup)
+    failover: bool = False         # degraded-mode serving: per-rank health
+    #                                mask + circuit breaker; a marked-dead
+    #                                rank's halo traffic is suppressed and
+    #                                its owned queries answer from stale
+    #                                replicas (all-alive = bit-identical)
+    probe_timeout_s: float = 1.0   # re-probe timeout (a hung probe = dead)
+    breaker_cooldown: int = 1      # rounds OPEN before the half-open probe
+    breaker_threshold: int = 1     # failures that open a rank's breaker
 
 
 def build_serve_data(ps: PartitionSet) -> dict:
@@ -188,6 +197,20 @@ class DistGNNServeScheduler(ServeFrontend):
                     hot_vids, (self.num_ranks, len(hot_vids))))
                 self._hot_vid_p = self._hot_local_positions(hot_vids)
         self._init_frontend()
+        # degraded-mode failover (PR 10): per-rank circuit breaker.  A dead
+        # rank's owned queries answer from stale replicas (hot tier / any
+        # alive shard's output cache) and the compiled step's `alive` mask
+        # suppresses halo traffic to/from it; with every rank alive the
+        # masked step computes bit-identical outputs, so arming the knob
+        # on a healthy cluster changes nothing.
+        self.breaker: Optional[RankHealthMask] = None
+        self.probe_fn = None   # Callable[[int], bool]; None = probe succeeds
+        self.degraded_answers = 0
+        self.degraded_dropped = 0
+        if self.scfg.failover:
+            self.breaker = RankHealthMask(
+                self.num_ranks, cooldown=self.scfg.breaker_cooldown,
+                threshold=self.scfg.breaker_threshold)
         # fused Pallas serve layer — graphsage only, GAT keeps composed jnp
         self._fused = bool(self.scfg.fused_kernel) and cfg.model == "graphsage"
         self._step = self._build_step()
@@ -249,7 +272,7 @@ class DistGNNServeScheduler(ServeFrontend):
             fwd = sage_lib.forward if cfg.model == "graphsage" \
                 else gat_lib.forward
 
-        def stepf(params, states, tstates, data, mb):
+        def body(params, states, tstates, data, mb, alive):
             sq = lambda t: jax.tree_util.tree_map(lambda a: a[0], t)
             data, mb = sq(data), sq(mb)
             states = [sq(s) for s in states]
@@ -308,10 +331,14 @@ class DistGNNServeScheduler(ServeFrontend):
                 # — ONE fused pair for all `rounds` fused segments
                 # (layer-0 halo features come from the static per-shard
                 # mirror and never travel)
+                # the failover health mask rides into the fetch: requests
+                # to a dead owner are suppressed (the row falls to the
+                # validity-mask drop below) and a dead rank's responder
+                # side answers nothing
                 need = is_halo & ~hit & ~hot_hit
                 h, got, nreq = engine.cache_fetch(states[k - 1], vids,
                                                   owner_nodes[k], need, h,
-                                                  rounds=rounds)
+                                                  rounds=rounds, alive=alive)
                 # a halo is valid only if substituted (its local partial
                 # compute never aggregated its remote neighborhood)
                 valid = ((valid & ~is_halo) | hit | hot_hit | got) & maskk
@@ -378,9 +405,19 @@ class DistGNNServeScheduler(ServeFrontend):
                     [exp(s) for s in new_t], exp(stats))
 
         shard, repl = P("data"), P()
+        if self.scfg.failover:
+            # failover step: one extra replicated [R] bool health mask
+            def stepf(params, states, tstates, data, mb, alive):
+                return body(params, states, tstates, data, mb, alive)
+            in_specs = (repl, [shard] * L, [shard] * hot_layers, shard,
+                        shard, repl)
+        else:
+            def stepf(params, states, tstates, data, mb):
+                return body(params, states, tstates, data, mb, None)
+            in_specs = (repl, [shard] * L, [shard] * hot_layers, shard,
+                        shard)
         smapped = compat.shard_map(
-            stepf, mesh=self.mesh,
-            in_specs=(repl, [shard] * L, [shard] * hot_layers, shard, shard),
+            stepf, mesh=self.mesh, in_specs=in_specs,
             out_specs=(shard, shard, [shard] * L, [shard] * hot_layers,
                        shard))
         return jax.jit(smapped)
@@ -403,6 +440,22 @@ class DistGNNServeScheduler(ServeFrontend):
         pending: List[List] = [[] for _ in range(R)]
         index: List[dict] = [dict() for _ in range(R)]
         while len(self.router) or any(pending):
+            if self.breaker is not None:
+                # advance circuit breakers (cooldown-expired ranks get the
+                # timed re-probe), then answer queries owned by a
+                # still-dead rank from stale replicas right away — a dead
+                # shard never stalls the round loop
+                self._breaker_tick()
+                for r in self.breaker.dead_ranks:
+                    if self.router.queues[r]:
+                        drained = self.router.drain(
+                            r, len(self.router.queues[r]))
+                        self._answer_degraded([e[0] for e in drained])
+                    if pending[r]:
+                        self._answer_degraded(
+                            [q for _, reqs in pending[r] for q in reqs])
+                        pending[r] = []
+                        index[r].clear()
             # fill FULL per-rank microbatches with cache misses: output-cache
             # hits are answered by the stacked fast-path lookup and never
             # occupy a compute slot
@@ -462,7 +515,111 @@ class DistGNNServeScheduler(ServeFrontend):
         out["round_batch"] = self.scfg.round_batch
         if self.hot is not None:
             out.update(self.hot.metrics())
+        if self.breaker is not None:
+            out["serve_degraded"] = float(self.breaker.any_dead)
+            out["dead_ranks"] = list(self.breaker.dead_ranks)
+            out["degraded_answers"] = self.degraded_answers
+            out["degraded_dropped"] = self.degraded_dropped
         return out
+
+    # -- degraded-mode failover ----------------------------------------------
+    def mark_dead(self, rank: int) -> None:
+        """Externally declare a rank dead (failed liveness probe, hung
+        RPC): its breaker opens immediately, halo traffic to/from it is
+        suppressed from the next round, and its owned queries answer
+        from stale replicas until the half-open re-probe succeeds."""
+        if self.breaker is None:
+            raise RuntimeError("mark_dead requires DistServeConfig"
+                               "(failover=True)")
+        self.breaker.force_open(rank, self.steps_run)
+        obs.get().registry.log_event("serve_rank_dead", rank=rank,
+                                     round=self.steps_run)
+        if self.health:
+            self.health.recorder.note("rank_dead", rank=rank,
+                                      round=self.steps_run)
+        self._publish_mask()
+
+    def record_rank_failure(self, rank: int) -> bool:
+        """Count one failure against ``rank``; returns True when the
+        accumulated failures reach ``breaker_threshold`` and the breaker
+        opens (at which point the rank is treated exactly as
+        ``mark_dead``)."""
+        if self.breaker is None:
+            raise RuntimeError("record_rank_failure requires "
+                               "DistServeConfig(failover=True)")
+        opened = self.breaker.record_failure(rank, self.steps_run)
+        if opened:
+            obs.get().registry.log_event("serve_rank_dead", rank=rank,
+                                         round=self.steps_run)
+            if self.health:
+                self.health.recorder.note("rank_dead", rank=rank,
+                                          round=self.steps_run)
+            self._publish_mask()
+        return opened
+
+    def _breaker_tick(self) -> None:
+        """Advance every rank's circuit breaker by one serve round: a
+        rank OPEN past its cooldown goes HALF_OPEN and gets one timed
+        re-probe (``probe_fn``; ``None`` probes succeed).  A passing
+        probe closes the breaker — full bit-normal routing resumes next
+        round; a failing/hung probe re-opens it for another cooldown."""
+        recovered = self.breaker.tick(self.steps_run, probe=self.probe_fn,
+                                      timeout_s=self.scfg.probe_timeout_s)
+        for r in recovered:
+            obs.get().registry.log_event("serve_rank_recovered", rank=r,
+                                         round=self.steps_run)
+            if self.health:
+                self.health.recorder.note("rank_recovered", rank=r,
+                                          round=self.steps_run)
+        if recovered:
+            self._publish_mask()
+
+    def _publish_mask(self) -> None:
+        dead = self.breaker.dead_ranks
+        obs.set_gauge("serve_degraded", float(bool(dead)))
+        obs.set_gauge("serve_dead_ranks", float(len(dead)))
+
+    def _answer_degraded(self, reqs) -> None:
+        """Answer queries owned by a dead rank from stale replicas:
+        any alive shard whose output cache holds the vertex (residency
+        mirrors are host-side, so the scan is free), else any alive
+        hot-tier replica.  A query with no replica anywhere finishes
+        with a zero vector and ``served_by="degraded_dropped"`` —
+        bounded degradation, never a stall."""
+        L = self.cfg.num_layers
+        dim = serve_layer_dims(self.cfg)[-1]
+        alive = [r for r in range(self.num_ranks)
+                 if bool(self.breaker.alive[r])]
+        for req in reqs:
+            vid = req.vid
+            src, tier = None, False
+            if self.scfg.cache.enabled:
+                for r in alive:
+                    if self.cache.output_resident(r, vid):
+                        src = r
+                        break
+            if src is None and self.hot is not None:
+                for r in alive:
+                    if self.hot.output_resident(r, vid):
+                        src, tier = r, True
+                        break
+            if src is None:
+                self.degraded_dropped += 1
+                obs.count("serve_degraded_dropped")
+                self._finish(req, np.zeros(dim, np.float32),
+                             "degraded_dropped")
+                continue
+            vids = np.full((self.num_ranks, 1), -1, np.int32)
+            vids[src, 0] = vid
+            if tier:
+                _, emb = self._tier_lookup(self.hot.states[L - 1],
+                                           jnp.asarray(vids))
+            else:
+                _, emb = self._lookup(self.cache.states[L - 1],
+                                      jnp.asarray(vids))
+            self.degraded_answers += 1
+            obs.count("serve_degraded_answers")
+            self._finish(req, np.asarray(emb)[src, 0], "degraded_replica")
 
     def audit(self, epoch: Optional[int] = None):
         """On-demand exactness audit across every shard: sample cached
@@ -611,9 +768,12 @@ class DistGNNServeScheduler(ServeFrontend):
             tstates = self.hot.states if self.hot is not None else []
             step_span = (obs.span("kernel_serve_fused", rounds=NB)
                          if self._fused else contextlib.nullcontext())
+            step_args = (self.params, states, tstates, self.data, mb)
+            if self.breaker is not None:
+                step_args += (jnp.asarray(self.breaker.alive),)
             with step_span:
-                out, out_valid, new_states, new_t, stats = self._step(
-                    self.params, states, tstates, self.data, mb)
+                out, out_valid, new_states, new_t, stats = \
+                    self._step(*step_args)
             out = np.asarray(out)
             out_valid = np.asarray(out_valid)
             stats = jax.tree_util.tree_map(np.asarray, stats)
@@ -632,8 +792,16 @@ class DistGNNServeScheduler(ServeFrontend):
             self._record_rank_round(stats, time.perf_counter() - t_round0)
             for r, groups in enumerate(round_groups):
                 for i, (local, reqs) in enumerate(groups):
-                    assert out_valid[r, i], \
-                        f"requests {[q.rid for q in reqs]} " \
-                        f"(vid {reqs[0].vid}) not served"
-                    for req in reqs:
-                        self._finish(req, out[r, i], "compute")
+                    if out_valid[r, i]:
+                        for req in reqs:
+                            self._finish(req, out[r, i], "compute")
+                    elif self.breaker is not None and self.breaker.any_dead:
+                        # halo starvation under degraded routing: the
+                        # row's remote neighborhood lives on a dead rank,
+                        # so fall back to stale replicas (or a bounded
+                        # zero-vector drop) instead of stalling the round
+                        self._answer_degraded(list(reqs))
+                    else:
+                        raise RuntimeError(
+                            f"requests {[q.rid for q in reqs]} "
+                            f"(vid {reqs[0].vid}) not served")

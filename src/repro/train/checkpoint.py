@@ -1,4 +1,12 @@
-"""Flat-npz checkpointing for arbitrary pytrees (params, opt state, HECs)."""
+"""Flat-npz checkpointing for arbitrary pytrees (params, opt state, HECs).
+
+Writes are atomic: the archive is streamed to ``<path>.tmp`` and moved
+into place with ``os.replace``, so a crash mid-save never leaves a
+truncated checkpoint at ``path``.  ``np.savez`` is handed an open file
+object rather than a path string — given a string it silently appends
+``.npz`` when the suffix is missing, which used to strand the archive at
+``<path>.npz`` while ``restore(path)`` looked for ``<path>``.
+"""
 from __future__ import annotations
 
 import os
@@ -7,28 +15,47 @@ import jax
 import numpy as np
 
 
+class CheckpointMismatchError(ValueError):
+    """Checkpoint does not match the target pytree (shape or leaf count)."""
+
+
 def _flatten(tree):
     flat, treedef = jax.tree_util.tree_flatten(tree)
     return flat, treedef
 
 
-def save(path: str, tree, step: int = 0):
+def save(path: str, tree, step: int = 0) -> str:
     flat, treedef = _flatten(tree)
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(flat)}
     arrays["__step__"] = np.asarray(step)
-    np.savez(path, **arrays)
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+    return path
 
 
 def restore(path: str, like_tree):
-    """Restore into the structure of ``like_tree`` (shape-checked)."""
+    """Restore into the structure of ``like_tree`` (shape-checked).
+
+    Raises :class:`CheckpointMismatchError` — a real exception, not an
+    ``assert`` that vanishes under ``python -O`` — when the archive's
+    leaf count or any leaf shape disagrees with ``like_tree``.
+    """
     flat, treedef = _flatten(like_tree)
     with np.load(path) as data:
+        n_leaves = sum(1 for k in data.files if k.startswith("leaf_"))
+        if n_leaves != len(flat):
+            raise CheckpointMismatchError(
+                f"{path}: checkpoint has {n_leaves} leaves, "
+                f"target tree has {len(flat)}")
         loaded = []
         for i, ref in enumerate(flat):
             arr = data[f"leaf_{i}"]
-            assert arr.shape == tuple(ref.shape), \
-                f"leaf {i}: ckpt {arr.shape} != model {ref.shape}"
+            if arr.shape != tuple(ref.shape):
+                raise CheckpointMismatchError(
+                    f"leaf {i}: ckpt {arr.shape} != model {tuple(ref.shape)}")
             loaded.append(jax.numpy.asarray(arr, dtype=ref.dtype))
         step = int(data["__step__"])
     return jax.tree_util.tree_unflatten(treedef, loaded), step

@@ -50,6 +50,7 @@ from repro.graph.partition import PartitionSet
 from repro.graph.sampling import sample_blocks
 from repro.pipeline.staging import MinibatchPipeline
 from repro.pipeline.vectorized_sampler import stack_ranks
+from repro.resilience.inject import CODE_NAN_STEP
 from repro.models.gnn import gat as gat_lib
 from repro.models.gnn import graphsage as sage_lib
 from repro.train import optimizer as opt_lib
@@ -175,6 +176,15 @@ class DistTrainer:
     # Host-side reads of existing state with its own RNG, so the training
     # trajectory is bit-identical with the plane off or on.
     quality: Optional["obs.QualityPlane"] = None
+    # resilience plane (repro.resilience.ResiliencePlane): epoch-boundary
+    # checkpoints of the full state pytree, scheduled fault injection, and
+    # the NaN/Inf step guard.  When it is *step-armed* (nan_guard or a
+    # fault schedule) the compiled step takes one extra per-rank int32
+    # fault-code input and routes the param/opt update through a
+    # finite-guard select; with all-zero codes every select takes the
+    # same branch, so a clean armed run computes identical bits — and a
+    # plane that only checkpoints leaves the step untouched entirely.
+    resilience: Optional["object"] = None
 
     def __post_init__(self):
         if self.engine is None:
@@ -239,7 +249,7 @@ class DistTrainer:
 
     # -- per-rank step body (inside shard_map) ------------------------------
     def _rank_step(self, params, opt_state, hec, hot, inflight, data, mb,
-                   seed):
+                   seed, fault=None):
         cfg = self.cfg
         L = cfg.num_layers
         dims = layer_dims(cfg)
@@ -251,6 +261,7 @@ class DistTrainer:
         hec = [sq(h) for h in hec]
         hot = [sq(h) for h in hot]
         inflight = sq(inflight)
+        fcode = sq(fault) if fault is not None else None
 
         num_solid = data["num_solid"]
         P_max = data["vid_o"].shape[0]
@@ -304,6 +315,14 @@ class DistTrainer:
             hits0 = (got.sum(), jnp.sum(is_halo0), zero)
         else:
             hits0 = (zero, jnp.sum(is_halo0), zero)
+
+        if fcode is not None:
+            # nan_step fault: poison this rank's layer-0 activations AFTER
+            # every cache substitution, so the whole forward/backward goes
+            # non-finite and the step guard below must contain it.  A
+            # clean rank multiplies by 1.0 — bit-identity preserved.
+            h0 = h0 * jnp.where((fcode & CODE_NAN_STEP) != 0,
+                                jnp.float32(jnp.nan), jnp.float32(1.0))
 
         def loss_fn(params):
             captured = {}
@@ -359,7 +378,7 @@ class DistTrainer:
                 jax.vjp(loss_fn, params, has_aux=True)
             inflight, push_stats = self.engine.aep_push(
                 data, mb, captured, vid_o_nodes, num_solid, inflight, seed,
-                dims, dmax, me)
+                dims, dmax, me, fault_code=fcode)
             grads, = vjp_fn(jnp.ones_like(loss))
         else:
             (loss, (nll_sum, correct, n_valid, captured, hits)), grads = \
@@ -367,7 +386,7 @@ class DistTrainer:
             if self.mode == "aep":
                 inflight, push_stats = self.engine.aep_push(
                     data, mb, captured, vid_o_nodes, num_solid, inflight,
-                    seed, dims, dmax, me)
+                    seed, dims, dmax, me, fault_code=fcode)
         # per-rank telemetry shard: the pre-psum values, captured BEFORE the
         # cross-rank reductions below and returned as one extra sharded
         # output.  The host reads it with the metrics it already transfers
@@ -401,12 +420,34 @@ class DistTrainer:
         loss_m = jax.lax.psum(nll_sum, "data") / denom
         acc_m = jax.lax.psum(correct, "data") / denom
 
-        params, opt_state, diag = opt_lib.adam_update(
+        new_params, new_opt, diag = opt_lib.adam_update(
             grads, opt_state, params,
             opt_lib.AdamConfig(lr=cfg.lr, grad_clip=1.0))
+        grad_norm = diag["grad_norm"]
+        skipped = None
+        if fcode is None:
+            params, opt_state = new_params, new_opt
+        else:
+            # NaN/Inf step guard: loss and grads are already psum'ed, so
+            # `ok` is uniform across ranks — either every rank applies
+            # this minibatch's update or every rank skips it.  A clean
+            # step selects the `new` branch everywhere, bit-exactly.
+            ok = jnp.isfinite(loss_m)
+            for g in jax.tree_util.tree_leaves(grads):
+                ok = ok & jnp.isfinite(g).all()
+            sel = lambda n, o: jnp.where(ok, n, o)
+            params = jax.tree_util.tree_map(sel, new_params, params)
+            opt_state = jax.tree_util.tree_map(sel, new_opt, opt_state)
+            loss_m = jnp.where(ok, loss_m, 0.0)
+            acc_m = jnp.where(ok, acc_m, 0.0)
+            examples = jnp.where(ok, examples, 0)
+            grad_norm = jnp.where(ok, grad_norm, 0.0)
+            skipped = 1.0 - ok.astype(jnp.float32)
 
         metrics = {"loss": loss_m, "acc": acc_m, "examples": examples,
-                   "grad_norm": diag["grad_norm"]}
+                   "grad_norm": grad_norm}
+        if skipped is not None:
+            metrics["skipped"] = skipped
         if push_stats is not None:
             metrics["aep_push_rows"] = jax.lax.psum(
                 push_stats["push_rows"], "data")
@@ -436,8 +477,10 @@ class DistTrainer:
             return pipeline
         if not self.cfg.pipeline.enabled:
             return None
+        inj = getattr(self.resilience, "injector", None) \
+            if self.resilience is not None else None
         return MinibatchPipeline(ps, self.cfg, base_seed=seed0,
-                                 mesh=self.mesh)
+                                 mesh=self.mesh, injector=inj)
 
     def make_step(self, dist_data=None, donate=True):
         cfg = self.cfg
@@ -448,23 +491,40 @@ class DistTrainer:
         # the step after init_state)
         hot_layers = cfg.num_layers \
             if (self.mode == "aep" and self.engine.hot_budget) else 0
+        armed = self.resilience is not None \
+            and getattr(self.resilience, "step_armed", False)
 
-        def stepf(params, opt_state, hec, hot, inflight, data, mb, seed):
-            return self._rank_step(params, opt_state, hec, hot, inflight,
-                                   data, mb, seed)
+        if armed:
+            # step-armed resilience: one extra sharded [R] int32 fault-code
+            # input (see repro.resilience.inject); zero codes compute the
+            # exact bits of the unarmed step
+            def stepf(params, opt_state, hec, hot, inflight, data, mb,
+                      seed, fault):
+                return self._rank_step(params, opt_state, hec, hot,
+                                       inflight, data, mb, seed, fault)
+            in_specs = (repl, repl, [shard] * cfg.num_layers,
+                        [shard] * hot_layers, shard, shard, shard, repl,
+                        shard)
+        else:
+            def stepf(params, opt_state, hec, hot, inflight, data, mb,
+                      seed):
+                return self._rank_step(params, opt_state, hec, hot,
+                                       inflight, data, mb, seed)
+            in_specs = (repl, repl, [shard] * cfg.num_layers,
+                        [shard] * hot_layers, shard, shard, shard, repl)
 
         smapped = compat.shard_map(
             stepf, mesh=self.mesh,
-            in_specs=(repl, repl, [shard] * cfg.num_layers,
-                      [shard] * hot_layers, shard, shard, shard, repl),
+            in_specs=in_specs,
             out_specs=(repl, repl, [shard] * cfg.num_layers,
                        [shard] * hot_layers, shard, shard, repl))
         return jax.jit(smapped,
                        donate_argnums=(1, 2, 3, 4) if donate else ())
 
     def train_epochs(self, ps, dist_data, state, num_epochs, seed0=0,
-                     step_fn=None, log_every=0, pipeline="auto"):
-        """Train for ``num_epochs``.
+                     step_fn=None, log_every=0, pipeline="auto",
+                     start_epoch=0):
+        """Train for ``num_epochs`` (epochs ``start_epoch`` onward).
 
         ``pipeline`` selects the minibatch source:
           "auto"              — a ``MinibatchPipeline`` when the config's
@@ -476,6 +536,11 @@ class DistTrainer:
                                 (reference ``sample_blocks``, no overlap).
         Ranks with fewer minibatches than the epoch maximum contribute empty
         (fully masked) batches; metrics count only real examples.
+
+        ``start_epoch`` is the crash-resume entry point: every minibatch
+        is a pure function of ``(seed0, epoch, step)``, so restoring the
+        epoch-``k`` checkpoint and continuing with ``start_epoch=k+1``
+        replays the exact sampler streams of the uninterrupted run.
         """
         cfg = self.cfg
         pipeline = self._resolve_pipeline(ps, seed0, pipeline)
@@ -500,9 +565,11 @@ class DistTrainer:
             if (reg.enabled or health) else None
         guard = health.guard("train_step_loop") if health \
             else contextlib.nullcontext()
+        rz = self.resilience
+        armed = rz is not None and getattr(rz, "step_armed", False)
         s_policy = cfg.pipeline.sampler.policy
         with guard:
-            for ep in range(num_epochs):
+            for ep in range(start_epoch, start_epoch + num_epochs):
                 if (pipeline is not None and s_policy == "cv"
                         and cfg.pipeline.sampler.device_draw):
                     # control-variate sampling: refresh the per-rank HEC
@@ -521,21 +588,31 @@ class DistTrainer:
                 ep_metrics = []
                 t_step_ep = 0.0
                 ph0, wall0 = phase_at(), time.perf_counter()
-                for mb in mb_iter:
+                for k_ep, mb in enumerate(mb_iter):
                     # the span covers dispatch AND the blocking host
                     # transfer of the metrics — i.e. the device step's wall
                     # time as seen by the training loop
                     ts0 = time.perf_counter()
+                    # scheduled fault codes for this (epoch, step-in-epoch)
+                    # — zeros (the bit-identical clean path) unless a
+                    # FaultSchedule entry matches; delay_rank faults sleep
+                    # inside step_codes
+                    fargs = (jnp.asarray(
+                        rz.step_codes(ep, k_ep, self.num_ranks)),) \
+                        if armed else ()
                     with obs.span("step", epoch=ep, step=step_idx):
                         (state["params"], state["opt_state"], state["hec"],
                          state["hot"], state["inflight"], rank_stats,
                          metrics) = step_fn(
                             state["params"], state["opt_state"],
                             state["hec"], state["hot"], state["inflight"],
-                            dist_data, mb, jnp.uint32(step_idx))
+                            dist_data, mb, jnp.uint32(step_idx), *fargs)
                         ep_metrics.append(
                             {k_: float(v) for k_, v in metrics.items()})
                     t_step_ep += time.perf_counter() - ts0
+                    if armed:
+                        rz.on_step(ep, k_ep,
+                                   ep_metrics[-1].get("skipped", 0.0))
                     if acc is not None:
                         acc.add(jax.tree_util.tree_map(np.asarray,
                                                        rank_stats))
@@ -583,15 +660,26 @@ class DistTrainer:
                     if quality.should_audit(ep):
                         self.audit(ps, dist_data, state, epoch=ep)
                 history.append(mean)
+                if rz is not None and getattr(rz, "ckpt", None) is not None:
+                    # epoch-boundary checkpoint of the FULL state pytree
+                    # (params, opt state, HEC, hot tier, inflight queue).
+                    # state["step"] is stamped first so a resumed run
+                    # continues the device-seed sequence bit-exactly.
+                    state["step"] = jnp.asarray(step_idx, jnp.int32)
+                    rz.maybe_checkpoint(state, ep)
                 if log_every:
                     hl = [f"l{l}:{mean.get(f'hec_hits_l{l}', 0)/max(mean.get(f'hec_halos_l{l}',1),1):.2f}"
                           for l in range(cfg.num_layers)]
                 if log_every and (ep % log_every == 0
-                                  or ep == num_epochs - 1):
+                                  or ep == start_epoch + num_epochs - 1):
                     print(f"[{self.mode}] epoch {ep}: "
                           f"loss={mean['loss']:.4f} "
                           f"acc={mean['acc']:.3f} hit-rates {' '.join(hl)}")
         state["step"] = jnp.asarray(step_idx, jnp.int32)
+        if rz is not None:
+            # one FLIGHT_resilience.json per run that saw faults or skips,
+            # through the PR 7 flight-recorder contract
+            rz.finalize(health)
         return state, history
 
     def _cv_residency(self, ps, state):
@@ -686,12 +774,18 @@ class DistTrainer:
                         seeds.append(test[:cfg.batch_size])
                     yield sample_step(ps, cfg, seeds, rng)
             mb_iter = _legacy()
+        # a step-armed trainer's compiled step takes the fault-code input;
+        # evaluation always runs clean (all-zero codes — same bits)
+        fargs = ((jnp.zeros((R,), jnp.int32),)
+                 if (self.resilience is not None
+                     and getattr(self.resilience, "step_armed", False))
+                 else ())
         accs, weights = [], []
         for k, mb in enumerate(mb_iter):
             (_, _, _, _, _, _, metrics) = step_fn(
                 state["params"], state["opt_state"], state["hec"],
                 state["hot"], state["inflight"], dist_data, mb,
-                jnp.uint32(10_000 + k))
+                jnp.uint32(10_000 + k), *fargs)
             accs.append(float(metrics["acc"]))
             weights.append(float(metrics["examples"]))
         if not sum(weights):

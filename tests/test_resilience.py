@@ -1,0 +1,590 @@
+"""Resilience plane tests: fault injection, crash-resume, degraded serving.
+
+Host-side pieces run inline: the checkpoint format fixes (exact-path save,
+tmp+rename atomicity, ``CheckpointMismatchError`` instead of a stripped
+assert), the checkpoint manager's retention/LATEST logic, fault schedule
+parsing + determinism, the injector's device bitmasks, the circuit
+breaker's state machine, and the prefetcher's one-shot retry.
+
+The chaos contracts need a real mesh, so they run in subprocesses
+(forced XLA host devices before jax init, same convention as
+test_dist_serving.py):
+
+  * **crash-resume bit-identity** — a run checkpointed at epoch 1 and
+    killed, then resumed in a FRESH process, ends bit-identical (params,
+    opt state, HEC, hot tier, inflight queue) to the uninterrupted run,
+  * **armed-but-clean = off** — the guard/injector-armed step with
+    all-zero fault codes computes the same bits as the unarmed step,
+  * **chaos containment** — injected NaN steps are skipped (training
+    continues, params stay finite), wire faults (drop/corrupt) never
+    poison remote caches, and replaying the same schedule reproduces the
+    same final state bit for bit,
+  * **degraded serving** — with one rank marked dead, serving completes
+    without stalling: the dead rank's owned queries answer from stale
+    hot-tier replicas (exact, because replicas were warmed exact) or
+    degrade to a bounded zero-vector drop; after the breaker's re-probe
+    succeeds, routing returns to bit-normal.
+"""
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.pipeline.prefetcher import prefetch
+from repro.resilience import (CheckpointManager, FaultInjector,
+                              FaultSchedule, FaultSpec,
+                              PrefetchWorkerKilled, RankHealthMask,
+                              ResilienceConfig, ResiliencePlane,
+                              probe_with_timeout)
+from repro.resilience.inject import (CODE_CORRUPT_PUSH, CODE_DROP_PUSH,
+                                     CODE_NAN_STEP)
+from repro.train import checkpoint as ckpt_lib
+from repro.train.checkpoint import CheckpointMismatchError
+
+
+# -- checkpoint format (satellite: exact path + atomicity + typed errors) ----
+
+def _tree():
+    return {"a": np.arange(4, dtype=np.float32),
+            "b": {"c": np.ones((2, 3), np.float32)}}
+
+
+def test_checkpoint_save_honors_exact_path(tmp_path):
+    """np.savez silently appends ``.npz`` to bare paths; the save helper
+    must write to EXACTLY the path it was given (and return it)."""
+    for name in ("state.npz", "state.bin", "state"):
+        path = str(tmp_path / name)
+        assert ckpt_lib.save(path, _tree(), step=7) == path
+        assert os.path.exists(path), name
+    leftovers = [n for n in os.listdir(tmp_path) if n.endswith(".tmp")]
+    assert leftovers == []      # tmp+os.replace leaves no partial files
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    ckpt_lib.save(path, _tree(), step=42)
+    got, step = ckpt_lib.restore(path, _tree())
+    assert step == 42
+    assert np.array_equal(got["a"], _tree()["a"])
+    assert np.array_equal(got["b"]["c"], _tree()["b"]["c"])
+
+
+def test_checkpoint_mismatch_raises_typed_error(tmp_path):
+    path = str(tmp_path / "ck.npz")
+    ckpt_lib.save(path, _tree(), step=0)
+    wrong_shape = {"a": np.zeros(9, np.float32),
+                   "b": {"c": np.ones((2, 3), np.float32)}}
+    with pytest.raises(CheckpointMismatchError):
+        ckpt_lib.restore(path, wrong_shape)
+    wrong_count = {"a": np.zeros(4, np.float32)}
+    with pytest.raises(CheckpointMismatchError):
+        ckpt_lib.restore(path, wrong_count)
+
+
+def test_checkpoint_manager_retention_and_latest(tmp_path):
+    d = str(tmp_path / "ck")
+    mgr = CheckpointManager(d, every=2, keep=2)
+    assert [mgr.should_save(e) for e in range(4)] == [False, True,
+                                                      False, True]
+    for ep in (1, 3, 5):
+        mgr.save(_tree(), ep)
+    kept = sorted(n for n in os.listdir(d) if n.endswith(".npz"))
+    assert kept == ["ckpt_ep00003.npz", "ckpt_ep00005.npz"]
+    path, ep = mgr.latest()
+    assert ep == 5 and path.endswith("ckpt_ep00005.npz")
+    os.remove(os.path.join(d, "LATEST"))      # dir-scan fallback
+    path, ep = mgr.latest()
+    assert ep == 5
+    got, ep = mgr.restore(_tree())
+    assert ep == 5 and np.array_equal(got["a"], _tree()["a"])
+
+
+def test_checkpoint_manager_empty_dir_raises(tmp_path):
+    mgr = CheckpointManager(str(tmp_path / "empty"))
+    assert mgr.latest() is None
+    with pytest.raises(FileNotFoundError):
+        mgr.restore(_tree())
+
+
+# -- fault schedule + injector ----------------------------------------------
+
+def test_fault_spec_validates_kind():
+    with pytest.raises(ValueError):
+        FaultSpec(kind="meteor_strike", epoch=0, step=0)
+
+
+def test_fault_schedule_roundtrip_and_json(tmp_path):
+    sched = FaultSchedule([
+        FaultSpec("nan_step", epoch=1, step=0, rank=1),
+        FaultSpec("delay_rank", epoch=0, step=2, rank=0, seconds=0.01)])
+    again = FaultSchedule.from_dicts(sched.to_dicts())
+    assert again.to_dicts() == sched.to_dicts()
+    path = tmp_path / "faults.json"
+    path.write_text(json.dumps(sched.to_dicts()))
+    assert FaultSchedule.from_json(str(path)).to_dicts() == sched.to_dicts()
+    assert len(sched.faults_at(1, 0)) == 1
+    assert sched.faults_at(5, 5) == []
+    assert sched.has_device_faults
+
+
+def test_fault_schedule_sample_deterministic():
+    a = FaultSchedule.sample(8, num_epochs=4, steps_per_epoch=3,
+                             num_ranks=4, seed=11)
+    b = FaultSchedule.sample(8, num_epochs=4, steps_per_epoch=3,
+                             num_ranks=4, seed=11)
+    c = FaultSchedule.sample(8, num_epochs=4, steps_per_epoch=3,
+                             num_ranks=4, seed=12)
+    assert a.to_dicts() == b.to_dicts()
+    assert a.to_dicts() != c.to_dicts()
+
+
+def test_injector_step_codes_bitmask():
+    inj = FaultInjector(FaultSchedule([
+        FaultSpec("nan_step", epoch=0, step=1, rank=0),
+        FaultSpec("drop_push", epoch=0, step=1, rank=1),
+        FaultSpec("corrupt_push", epoch=0, step=1, rank=1)]))
+    codes = inj.step_codes(0, 1, num_ranks=2)
+    assert codes.dtype == np.int32
+    assert codes[0] == CODE_NAN_STEP
+    assert codes[1] == CODE_DROP_PUSH | CODE_CORRUPT_PUSH
+    assert not inj.step_codes(0, 0, num_ranks=2).any()
+    assert len(inj.events) == 3
+
+
+def test_injector_prefetch_crash_fires_once():
+    inj = FaultInjector(FaultSchedule([
+        FaultSpec("kill_prefetch", epoch=2, step=1)]))
+    inj.prefetch_crash(0, 0)                       # no match, no raise
+    with pytest.raises(PrefetchWorkerKilled):
+        inj.prefetch_crash(2, 1)
+    inj.prefetch_crash(2, 1)                       # the retry succeeds
+
+
+# -- circuit breaker ---------------------------------------------------------
+
+def test_breaker_threshold_and_cooldown():
+    m = RankHealthMask(3, cooldown=2, threshold=2)
+    assert not m.record_failure(1, round_idx=0)    # 1/2 failures
+    assert not m.any_dead
+    assert m.record_failure(1, round_idx=0)        # opens
+    assert m.dead_ranks == [1]
+    assert list(m.alive) == [True, False, True]
+    assert m.tick(1) == []                         # cooldown not elapsed
+    assert m.dead_ranks == [1]
+    assert m.tick(2) == [1]                        # probe=None succeeds
+    assert not m.any_dead
+
+
+def test_breaker_failing_probe_reopens():
+    m = RankHealthMask(2, cooldown=1, threshold=1)
+    m.force_open(0, round_idx=0)
+    assert m.tick(1, probe=lambda r: False) == []  # re-opened at round 1
+    assert m.dead_ranks == [0]
+    assert m.tick(1, probe=lambda r: True) == []   # fresh cooldown
+    assert m.tick(2, probe=lambda r: True) == [0]
+    assert not m.any_dead
+
+
+def test_probe_timeout_counts_as_dead():
+    assert probe_with_timeout(lambda r: True, 0, 1.0)
+    assert not probe_with_timeout(lambda r: False, 0, 1.0)
+    assert not probe_with_timeout(
+        lambda r: (_ for _ in ()).throw(RuntimeError("boom")), 0, 1.0)
+    assert not probe_with_timeout(
+        lambda r: time.sleep(2.0) or True, 0, 0.05)
+
+
+# -- prefetch worker-crash containment (satellite) ---------------------------
+
+def test_prefetch_retries_failed_step_once():
+    fired = set()
+
+    def make(step):
+        if step == 1 and step not in fired:
+            fired.add(step)
+            raise RuntimeError("worker died")
+        return {"step": step}
+
+    before = obs.get().registry.value("prefetch_retries")
+    got = [b["step"] for b in prefetch(make, 4, num_workers=2, depth=2)]
+    assert got == [0, 1, 2, 3]
+    after = obs.get().registry.value("prefetch_retries")
+    assert after - before == 1
+
+
+def test_prefetch_double_failure_propagates():
+    def make(step):
+        if step == 2:
+            raise RuntimeError("hard bug, not a flake")
+        return step
+
+    with pytest.raises(RuntimeError, match="hard bug"):
+        list(prefetch(make, 4, num_workers=2, depth=2))
+
+
+# -- resilience plane --------------------------------------------------------
+
+def test_plane_disarmed_is_inert(tmp_path):
+    rz = ResiliencePlane(ResilienceConfig())
+    assert not rz.step_armed
+    assert rz.ckpt is None and rz.injector is None
+    assert not rz.step_codes(0, 0, num_ranks=4).any()
+    assert rz.finalize() is None                   # nothing fired, no flight
+
+
+def test_plane_flight_dump(tmp_path):
+    rz = ResiliencePlane(ResilienceConfig(nan_guard=True,
+                                          flight_dir=str(tmp_path)))
+    assert rz.step_armed
+    rz.on_step(3, 1, skipped=1.0)
+    assert rz.skipped_steps == 1
+    path = rz.finalize()
+    assert path and os.path.exists(path)
+    assert os.path.basename(path) == "FLIGHT_resilience.json"
+    blob = json.loads(open(path).read())
+    assert blob["skipped_steps"] == 1
+
+
+# -- subprocess chaos: training ---------------------------------------------
+
+_TRAIN_SCRIPT = r"""
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import hashlib, json
+import jax
+import numpy as np
+from repro import obs, resilience
+from repro.configs.gnn import HECConfig, small_gnn_config
+from repro.graph import partition_graph, synthetic_graph
+from repro.launch.mesh import make_gnn_mesh
+from repro.train.gnn_trainer import DistTrainer, build_dist_data
+
+R = 2
+work = sys.argv[1]
+g = synthetic_graph(num_vertices=1200, avg_degree=6, num_classes=8,
+                    feat_dim=32, seed=5)
+ps = partition_graph(g, R, seed=0)
+cfg = small_gnn_config("graphsage", batch_size=32, feat_dim=32,
+                       num_classes=8, fanouts=(4, 8), hidden_size=64,
+                       hec=HECConfig(cache_size=2048, ways=8, life_span=2,
+                                     push_limit=256, delay=1))
+dd = build_dist_data(ps, cfg)
+mesh = make_gnn_mesh(R)
+
+def digest(state):
+    h = hashlib.sha256()
+    for leaf in jax.tree_util.tree_leaves(state):
+        h.update(np.asarray(leaf).tobytes())
+    return h.hexdigest()
+
+def run(epochs, rz=None, start_epoch=0, state=None):
+    tr = DistTrainer(cfg=cfg, mesh=mesh, num_ranks=R, mode="aep",
+                     resilience=rz)
+    if state is None:
+        state = tr.init_state(jax.random.key(0))
+    state, hist = tr.train_epochs(ps, dd, state, epochs, log_every=0,
+                                  start_epoch=start_epoch)
+    return tr, state, hist
+
+out = {}
+# uninterrupted baseline, resilience entirely off
+_, s_base, h_base = run(4)
+out["digest_base"] = digest(s_base)
+out["base_losses"] = [float(h["loss"]) for h in h_base]
+
+# armed-but-clean: guard compiled in, all-zero fault codes -> same bits
+rz = resilience.ResiliencePlane(resilience.ResilienceConfig(nan_guard=True))
+_, s_armed, h_armed = run(4, rz)
+out["digest_armed"] = digest(s_armed)
+
+# chaos run, twice: NaN poison + wire faults + a straggler; the guard
+# skips the poisoned step, aep_push contains the wire garbage, and the
+# whole thing replays bit for bit from the schedule
+def chaos():
+    sched = resilience.FaultSchedule.from_dicts([
+        {"kind": "nan_step", "epoch": 1, "step": 0, "rank": 1},
+        {"kind": "drop_push", "epoch": 2, "step": 1, "rank": 0},
+        {"kind": "corrupt_push", "epoch": 2, "step": 0, "rank": 1},
+        {"kind": "delay_rank", "epoch": 3, "step": 0, "rank": 0,
+         "seconds": 0.01}])
+    rz = resilience.ResiliencePlane(resilience.ResilienceConfig(
+        nan_guard=True, schedule=sched, flight_dir=work))
+    tr, s, _ = run(4, rz)
+    return digest(s), rz.skipped_steps, len(rz.events), s
+
+d1, sk1, ev1, s_chaos = chaos()
+d2, sk2, _, _ = chaos()
+out["chaos"] = {
+    "digest1": d1, "digest2": d2, "skipped": sk1, "skipped2": sk2,
+    "events": ev1, "differs_from_base": d1 != out["digest_base"],
+    "params_finite": bool(all(
+        np.isfinite(np.asarray(l)).all()
+        for l in jax.tree_util.tree_leaves(s_chaos["params"]))),
+    "flight": os.path.exists(os.path.join(work,
+                                          "FLIGHT_resilience.json"))}
+
+# prefetch worker kill: the one-shot retry redraws the exact batch, so
+# the run stays bit-identical to the clean one
+before = obs.get().registry.value("prefetch_retries")
+sched = resilience.FaultSchedule.from_dicts([
+    {"kind": "kill_prefetch", "epoch": 0, "step": 1}])
+rz = resilience.ResiliencePlane(resilience.ResilienceConfig(schedule=sched))
+_, s_k, _ = run(4, rz)
+out["prefetch"] = {
+    "retries": obs.get().registry.value("prefetch_retries") - before,
+    "digest": digest(s_k)}
+
+# "crashed" run: 2 epochs with epoch-boundary checkpoints, then this
+# process exits -- the resume script picks the state up cold
+rz = resilience.ResiliencePlane(resilience.ResilienceConfig(
+    ckpt_dir=os.path.join(work, "ck")))
+run(2, rz)
+out["head_ckpts"] = sorted(os.listdir(os.path.join(work, "ck")))
+print("RESULT" + json.dumps(out))
+"""
+
+_RESUME_SCRIPT = r"""
+import os, sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import hashlib, json
+import jax
+import numpy as np
+from repro import resilience
+from repro.configs.gnn import HECConfig, small_gnn_config
+from repro.graph import partition_graph, synthetic_graph
+from repro.launch.mesh import make_gnn_mesh
+from repro.train.gnn_trainer import DistTrainer, build_dist_data
+
+R = 2
+work = sys.argv[1]
+g = synthetic_graph(num_vertices=1200, avg_degree=6, num_classes=8,
+                    feat_dim=32, seed=5)
+ps = partition_graph(g, R, seed=0)
+cfg = small_gnn_config("graphsage", batch_size=32, feat_dim=32,
+                       num_classes=8, fanouts=(4, 8), hidden_size=64,
+                       hec=HECConfig(cache_size=2048, ways=8, life_span=2,
+                                     push_limit=256, delay=1))
+dd = build_dist_data(ps, cfg)
+mesh = make_gnn_mesh(R)
+rz = resilience.ResiliencePlane(resilience.ResilienceConfig(
+    ckpt_dir=os.path.join(work, "ck")))
+tr = DistTrainer(cfg=cfg, mesh=mesh, num_ranks=R, mode="aep",
+                 resilience=rz)
+state = tr.init_state(jax.random.key(0))
+state, ep = rz.ckpt.restore(state)
+state, _ = tr.train_epochs(ps, dd, state, 4 - (ep + 1), log_every=0,
+                           start_epoch=ep + 1)
+h = hashlib.sha256()
+for leaf in jax.tree_util.tree_leaves(state):
+    h.update(np.asarray(leaf).tobytes())
+print("RESULT" + json.dumps({"resumed_epoch": ep, "digest": h.hexdigest()}))
+"""
+
+
+def _run_sub(script, *argv):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    proc = subprocess.run([sys.executable, "-c", script, *argv], env=env,
+                          capture_output=True, text=True, timeout=1200)
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    line = [l for l in proc.stdout.splitlines()
+            if l.startswith("RESULT")][-1]
+    return json.loads(line[len("RESULT"):])
+
+
+@pytest.fixture(scope="module")
+def chaos(tmp_path_factory):
+    work = str(tmp_path_factory.mktemp("resilience"))
+    train = _run_sub(_TRAIN_SCRIPT, work)
+    resume = _run_sub(_RESUME_SCRIPT, work)
+    return {"train": train, "resume": resume}
+
+
+def test_armed_but_clean_is_bit_identical(chaos):
+    """The guard-armed step with all-zero fault codes computes the exact
+    bits of the unarmed step — arming resilience on a healthy run is
+    free."""
+    t = chaos["train"]
+    assert t["digest_armed"] == t["digest_base"]
+
+
+def test_injected_nan_step_is_skipped_and_contained(chaos):
+    """The poisoned step is skipped on every rank (collective-uniform
+    guard), wire faults never reach params, training continues to a
+    finite state — and the same schedule replays bit for bit."""
+    c = chaos["train"]["chaos"]
+    assert c["skipped"] >= 1 and c["skipped"] == c["skipped2"]
+    assert c["events"] == 4                       # every spec fired
+    assert c["params_finite"]
+    assert c["digest1"] == c["digest2"]           # reproducible chaos
+    assert c["differs_from_base"]                 # the faults really landed
+    assert c["flight"]                            # FLIGHT_resilience.json
+
+
+def test_prefetch_kill_retries_bit_identically(chaos):
+    """A killed prefetch worker costs one retry, not the run: per-step
+    RNG streams make the redraw exact, so the final state matches the
+    never-crashed baseline bit for bit."""
+    p = chaos["train"]["prefetch"]
+    assert p["retries"] == 1
+    assert p["digest"] == chaos["train"]["digest_base"]
+
+
+def test_kill_and_resume_is_bit_identical(chaos):
+    """Kill after epoch 1 (the head process exits), restore in a fresh
+    process, continue epochs 2..3: params, opt state, HEC, hot tier and
+    the inflight push queue all end bit-identical to the uninterrupted
+    4-epoch run."""
+    t, r = chaos["train"], chaos["resume"]
+    assert "ckpt_ep00000.npz" in t["head_ckpts"]
+    assert "ckpt_ep00001.npz" in t["head_ckpts"]
+    assert "LATEST" in t["head_ckpts"]
+    assert r["resumed_epoch"] == 1
+    assert r["digest"] == t["digest_base"]
+
+
+# -- subprocess chaos: degraded serving -------------------------------------
+
+_SERVE_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import json
+import jax
+import numpy as np
+from repro import obs
+from repro.configs.gnn import small_gnn_config
+from repro.graph import partition_graph, synthetic_graph
+from repro.launch.mesh import make_gnn_mesh
+from repro.serve.gnn import ServeCacheConfig
+from repro.serve.gnn.distributed import (DistGNNServeScheduler,
+                                         DistServeConfig,
+                                         layerwise_embeddings_dist)
+from repro.train.gnn_trainer import init_model_params
+
+R = 4
+g = synthetic_graph(num_vertices=900, avg_degree=2, num_classes=5,
+                    feat_dim=16, seed=3)
+ps1 = partition_graph(g, 1, seed=0)
+ps = partition_graph(g, R, seed=0)
+part = ps1.parts[0]
+max_deg = int((part.indptr[1:] - part.indptr[:-1]).max())
+mesh = make_gnn_mesh(R)
+cfg = small_gnn_config("graphsage", batch_size=16, feat_dim=16,
+                       num_classes=5, fanouts=(max_deg, max_deg),
+                       hidden_size=32)
+params = init_model_params(jax.random.key(0), cfg)
+ed = layerwise_embeddings_dist(cfg, params, ps, chunk_size=128)
+edL = np.asarray(ed[-1])
+L = cfg.num_layers
+all_v = np.arange(g.num_vertices)
+cache = lambda: ServeCacheConfig(cache_size=8192, ways=4)
+mk = lambda **kw: DistServeConfig(num_slots=8, halo_slots=160,
+                                  cache=cache(), hot_size=96, **kw)
+out = {}
+vids = np.arange(0, g.num_vertices, 7)
+
+def build(scfg):
+    s = DistGNNServeScheduler(cfg, params, ps, mesh, scfg)
+    s.cache.warm(ed, all_v, layers=range(L - 1))
+    s.hot.warm(ed)
+    return s
+
+# failover armed but all-alive == failover off, bit for bit
+b = build(mk())
+f = build(mk(failover=True))
+out_off = b.serve(vids)
+out_on = f.serve(vids)
+out["healthy"] = {"bit_match": bool(np.array_equal(out_on, out_off)),
+                  "serve_degraded": f.metrics()["serve_degraded"]}
+
+# kill rank 1: its owned queries answer from stale replicas, never stall
+hot_vids = np.asarray(f.hot.hot_vids)
+hot_set = set(int(v) for v in hot_vids)
+owner, _ = ps.route(hot_vids)
+dead_hot = hot_vids[owner == 1][:6]
+dead_cold_all = [int(v) for v in ps.parts[1].solid_vids
+                 if int(v) not in hot_set]
+dead_cold = np.array(dead_cold_all[:3])
+alive_v = np.asarray(ps.parts[0].solid_vids[:8])
+f.probe_fn = lambda r: False
+f.mark_dead(1)
+q = np.concatenate([dead_hot, dead_cold])
+ans = f.serve(q)
+m = f.metrics()
+nh = len(dead_hot)
+out["degraded"] = {
+    "serve_degraded": m["serve_degraded"],
+    "dead_ranks": m["dead_ranks"],
+    "degraded_answers": m["degraded_answers"],
+    "degraded_dropped": m["degraded_dropped"],
+    "hot_exact": bool(np.array_equal(ans[:nh], edL[dead_hot])),
+    "cold_zero": bool(np.all(ans[nh:] == 0.0)),
+    "gauge": obs.get().registry.value("serve_degraded")}
+
+# alive-rank traffic still flows (degraded, possibly, but no stall) and
+# advances the breaker's round clock
+f.serve(alive_v)
+# re-probe passes -> breaker closes -> bit-normal routing resumes
+f.probe_fn = lambda r: True
+f.serve(np.asarray(ps.parts[2].solid_vids[:4]))
+m2 = f.metrics()
+post = np.array(dead_cold_all[3:9])
+ans_post = f.serve(post)
+out["recovery"] = {
+    "serve_degraded": m2["serve_degraded"],
+    "dead_ranks": m2["dead_ranks"],
+    "gauge": obs.get().registry.value("serve_degraded"),
+    "post_exact_err": float(np.abs(ans_post - edL[post]).max()),
+    "recovered_events": len(list(
+        obs.get().registry.events_of("serve_rank_recovered"))),
+    "dead_events": len(list(
+        obs.get().registry.events_of("serve_rank_dead")))}
+print("RESULT" + json.dumps(out))
+"""
+
+
+@pytest.fixture(scope="module")
+def serve_chaos():
+    return _run_sub(_SERVE_SCRIPT)
+
+
+def test_failover_healthy_is_bit_identical(serve_chaos):
+    """failover=True with every rank alive answers the exact bits of the
+    failover-off scheduler (the all-True mask selects identical values)."""
+    h = serve_chaos["healthy"]
+    assert h["bit_match"]
+    assert h["serve_degraded"] == 0.0
+
+
+def test_dead_rank_serves_from_stale_replicas(serve_chaos):
+    """One rank dead: serving completes (no stall), hub queries owned by
+    the dead rank answer exactly from alive hot-tier replicas, cold
+    queries degrade to the bounded zero-vector drop, and the
+    serve_degraded gauge goes high."""
+    d = serve_chaos["degraded"]
+    assert d["serve_degraded"] == 1.0
+    assert d["dead_ranks"] == [1]
+    assert d["degraded_answers"] >= 6
+    assert d["degraded_dropped"] >= 3
+    assert d["hot_exact"]
+    assert d["cold_zero"]
+    assert d["gauge"] == 1.0
+
+
+def test_breaker_reprobe_restores_bit_normal_routing(serve_chaos):
+    """After the half-open probe passes, the breaker closes: gauges drop
+    to zero and the previously-dead rank's queries compute exactly
+    again."""
+    r = serve_chaos["recovery"]
+    assert r["serve_degraded"] == 0.0
+    assert r["dead_ranks"] == []
+    assert r["gauge"] == 0.0
+    assert r["recovered_events"] == 1
+    assert r["dead_events"] == 1
+    assert r["post_exact_err"] < 1e-5
